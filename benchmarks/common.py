@@ -1,0 +1,155 @@
+"""Shared machinery for the paper-experiment benchmarks.
+
+`schedule_query` runs the per-layer scheduling loop of the DMoE protocol
+for one query against a drawn channel — gates from an ExpertPool, the
+scheduler from repro.core — and returns per-layer (alpha, accounting,
+quality).  The final-answer accuracy model is the layer-importance-
+weighted per-layer aggregation quality (DESIGN.md §3):
+
+    acc = sum_l imp_l * q_l / sum_l imp_l,   imp_l = imp_decay^l
+
+with q_l = ExpertPool.accuracy(alpha_l, gates_l, domain).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.core import energy as energy_lib
+from repro.core import jesa as jesa_lib
+from repro.core import protocol as proto
+from repro.data.tasks import ExpertPool
+
+IMP_DECAY = 0.85
+
+
+@dataclasses.dataclass
+class QueryResult:
+    accuracy: float
+    comm_j: float
+    comp_j: float
+    per_layer_comm: np.ndarray
+    per_layer_comp: np.ndarray
+    per_layer_q: np.ndarray
+    selection_hist: np.ndarray      # (L, K)
+    des_nodes: int
+
+    @property
+    def total_j(self) -> float:
+        return self.comm_j + self.comp_j
+
+
+def schedule_query(
+    pool: ExpertPool,
+    *,
+    domain: int,
+    num_layers: int,
+    n_tokens: int,
+    scheme: str,                 # "topk" | "jesa" | "homogeneous" | "lb"
+    qos_z: float = 1.0,
+    gamma0: float = 0.7,
+    top_k: int = 2,
+    max_experts: int = 2,
+    num_subcarriers: int = 64,
+    seed: int = 0,
+    homogeneous_z: float = 0.5,
+) -> QueryResult:
+    k = pool.num_experts
+    rng = np.random.default_rng(seed)
+    ccfg = channel_lib.ChannelConfig(
+        num_experts=k, num_subcarriers=max(num_subcarriers, k * (k - 1)))
+    gains = channel_lib.sample_channel_gains(ccfg, rng)
+    rates = channel_lib.subcarrier_rates(ccfg, gains)
+    comp = energy_lib.make_comp_coeffs(k)
+    s0, p0 = 8192.0, ccfg.tx_power_w
+
+    # source node: the expert holding the query (paper: one query/node).
+    src = int(rng.integers(0, k))
+
+    per_comm, per_comp, per_q = [], [], []
+    hist = np.zeros((num_layers, k))
+    nodes_total = 0
+
+    for layer in range(1, num_layers + 1):
+        g_src = pool.gate_scores(domain, n_tokens, rng)     # (N, K)
+        gates = np.zeros((k, n_tokens, k))
+        gates[src] = g_src
+
+        if scheme == "topk":
+            res = jesa_lib.topk_allocate(gates, rates, top_k, comp, s0, p0)
+        elif scheme == "jesa":
+            q = qos_z * (gamma0 ** layer)
+            res = jesa_lib.jesa_allocate(gates, rates, q, max_experts,
+                                         comp, s0, p0, rng=rng)
+        elif scheme == "homogeneous":
+            res = jesa_lib.jesa_allocate(gates, rates, homogeneous_z,
+                                         max_experts, comp, s0, p0, rng=rng)
+        elif scheme == "lb":
+            q = qos_z * (gamma0 ** layer)
+            res = jesa_lib.lower_bound_allocate(gates, rates, q, max_experts,
+                                                comp, s0, p0)
+        else:
+            raise ValueError(scheme)
+        nodes_total += res.des_nodes
+
+        acct = proto.account_round(layer, res.alpha, res.beta, rates, comp,
+                                   s0, p0)
+        per_comm.append(acct.comm_energy_j)
+        per_comp.append(acct.comp_energy_j)
+        per_q.append(pool.accuracy(res.alpha[src], g_src, domain))
+        hist[layer - 1] = res.alpha[src].sum(axis=0) / max(
+            res.alpha[src].sum(), 1)
+
+    imp = IMP_DECAY ** np.arange(1, num_layers + 1)
+    q = np.array(per_q)
+    acc = float((imp * q).sum() / imp.sum())
+    return QueryResult(
+        accuracy=acc,
+        comm_j=float(np.sum(per_comm)),
+        comp_j=float(np.sum(per_comp)),
+        per_layer_comm=np.array(per_comm),
+        per_layer_comp=np.array(per_comp),
+        per_layer_q=q,
+        selection_hist=hist,
+        des_nodes=nodes_total,
+    )
+
+
+def avg_queries(pool, *, domains, n_queries: int, seed0: int = 0,
+                **kw) -> Dict:
+    accs, total, comm, comp = [], [], [], []
+    pl_comm = None
+    hist = None
+    for i in range(n_queries):
+        d = domains[i % len(domains)]
+        r = schedule_query(pool, domain=d, seed=seed0 + i, **kw)
+        accs.append(r.accuracy)
+        total.append(r.total_j)
+        comm.append(r.comm_j)
+        comp.append(r.comp_j)
+        pl_comm = (r.per_layer_comm + r.per_layer_comp if pl_comm is None
+                   else pl_comm + r.per_layer_comm + r.per_layer_comp)
+        hist = r.selection_hist if hist is None else hist + r.selection_hist
+    n = n_queries
+    return {
+        "accuracy": float(np.mean(accs)),
+        "energy_j": float(np.mean(total)),
+        "comm_j": float(np.mean(comm)),
+        "comp_j": float(np.mean(comp)),
+        "per_layer_j": pl_comm / n,
+        "selection_hist": hist / n,
+    }
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

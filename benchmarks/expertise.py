@@ -1,0 +1,73 @@
+"""Fig. 3 + Fig. 5: expertise diversity across the expert pool, and the
+layer-importance premise.
+
+Fig. 3's claim: vertically-partitioned experts inherit multi-domain
+specialization — each expert is best on its own domain, and the
+(gate-weighted) mixture matches or beats every individual expert on its
+home domain.  We check this on the Table-I-calibrated pool through the
+same gate model the scheduler sees.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer
+from repro.data.tasks import DOMAINS, table1_pool
+
+N_TOKENS = 64
+
+
+def run(verbose: bool = True):
+    pool = table1_pool()
+    k, nd = pool.num_experts, pool.num_domains
+    rng = np.random.default_rng(0)
+    rows = []
+    with Timer() as t:
+        # which expert does the gate prefer per domain?
+        pref = np.zeros((nd, k))
+        mix_acc = np.zeros(nd)
+        for d in range(nd):
+            g = pool.gate_scores(d, N_TOKENS, rng)          # (N, K)
+            pref[d] = g.mean(axis=0)
+            # full mixture (all experts, Eq. 8 weights = gates)
+            alpha = np.ones_like(g)
+            mix_acc[d] = pool.accuracy(alpha, g, d)
+        for d, dname in enumerate(DOMAINS):
+            best_expert = int(np.argmax(pool.profiles[:, d]))
+            rows.append({
+                "domain": dname,
+                "best_expert": best_expert,
+                "gate_top_expert": int(np.argmax(pref[d])),
+                "best_individual": round(
+                    100 * float(pool.profiles[:, d].max()), 1),
+                "mixture": round(100 * float(mix_acc[d]), 1),
+            })
+    if verbose:
+        print(f"{'domain':<10}{'best_exp':>9}{'gate_top':>9}"
+              f"{'best_ind':>10}{'mixture':>9}")
+        for r in rows:
+            print(f"{r['domain']:<10}{r['best_expert']:>9}"
+                  f"{r['gate_top_expert']:>9}{r['best_individual']:>10.1f}"
+                  f"{r['mixture']:>9.1f}")
+    claims = {
+        # the gate points at a (near-)strongest expert — Table I has
+        # near-ties (MMLU: 63.8 vs 63.1), so compare profile values, not
+        # indices
+        "gate_tracks_expertise": all(
+            pool.profiles[r["gate_top_expert"], d]
+            >= pool.profiles[:, d].max() - 0.01
+            for d, r in enumerate(rows)),
+        # diversity exists: different domains prefer different experts
+        "diverse_specialists": len(
+            {r["best_expert"] for r in rows}) >= 2,
+        # the mixture is within noise of the best individual everywhere
+        "mixture_competitive": all(
+            r["mixture"] >= r["best_individual"] - 1.5 for r in rows),
+    }
+    return [("expertise", t.us / nd,
+             ";".join(f"{k_}={v}" for k_, v in claims.items()))], rows, claims
+
+
+if __name__ == "__main__":
+    run()

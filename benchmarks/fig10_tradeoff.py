@@ -1,0 +1,103 @@
+"""Fig. 10: accuracy-energy tradeoff — JESA(gamma0 grid) dominates
+homogeneous allocation H(z grid); Fig. 5: lowering QoS at LOW layers
+hurts accuracy more than at high layers."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import IMP_DECAY, Timer, avg_queries, schedule_query
+from repro.data.tasks import mixed_cost_pool
+
+LAYERS = 32
+N_TOKENS = 12
+
+
+def run(verbose: bool = True):
+    pool = mixed_cost_pool(k=8, num_domains=3)
+    rows = []
+    with Timer() as t:
+        jesa_pts, homo_pts = [], []
+        for gamma0 in (0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 0.98):
+            r = avg_queries(pool, domains=[0, 1, 2], n_queries=3,
+                            num_layers=LAYERS, n_tokens=N_TOKENS,
+                            scheme="jesa", gamma0=gamma0)
+            jesa_pts.append((r["energy_j"], r["accuracy"]))
+            rows.append({"scheme": f"JESA({gamma0},2)",
+                         "energy_j": r["energy_j"],
+                         "accuracy": round(100 * r["accuracy"], 2)})
+        for z in (0.2, 0.35, 0.5, 0.65, 0.8):
+            r = avg_queries(pool, domains=[0, 1, 2], n_queries=3,
+                            num_layers=LAYERS, n_tokens=N_TOKENS,
+                            scheme="homogeneous", homogeneous_z=z)
+            homo_pts.append((r["energy_j"], r["accuracy"]))
+            rows.append({"scheme": f"H({z},2)",
+                         "energy_j": r["energy_j"],
+                         "accuracy": round(100 * r["accuracy"], 2)})
+
+        # Fig. 5 companion: lowered-QoS window position sweep
+        fig5 = []
+        for start in (1, 9, 17, 25):
+            accs = []
+            for i in range(3):
+                # homogeneous z=0.5 except a low-z window of 4 layers
+                qr = _windowed_query(pool, start=start, seed=i)
+                accs.append(qr)
+            fig5.append({"start_layer": start,
+                         "accuracy": round(100 * float(np.mean(accs)), 2)})
+
+    if verbose:
+        for r in rows:
+            print(f"{r['scheme']:<14} E={r['energy_j']:.4e} J  "
+                  f"acc={r['accuracy']:.2f}%")
+        print("fig5 lowered-QoS window:", fig5)
+
+    # Pareto dominance check: for each homo point, a jesa point exists
+    # with >= accuracy and <= energy (tolerance for noise)
+    dominated = 0
+    for he, ha in homo_pts:
+        # a JESA point with >= (acc - 0.75pt) at <= energy exists
+        if any(je <= he * 1.02 and ja >= ha - 0.0075 for je, ja in jesa_pts):
+            dominated += 1
+    claims = {
+        "jesa_dominates_homogeneous": dominated >= len(homo_pts) - 1,
+        "fig5_low_layers_matter_more":
+            fig5[0]["accuracy"] <= fig5[-1]["accuracy"] + 1e-9,
+    }
+    return ([("fig10_tradeoff", t.us / max(len(rows), 1),
+              ";".join(f"{k}={v}" for k, v in claims.items()))],
+            rows + fig5, claims)
+
+
+def _windowed_query(pool, *, start: int, seed: int,
+                    span: int = 4, low_z: float = 0.15,
+                    base_z: float = 0.5) -> float:
+    """One query with a lowered-QoS window (Fig. 5's experiment)."""
+    import numpy as np
+
+    from repro.core import channel as channel_lib
+    from repro.core import energy as energy_lib
+    from repro.core import jesa as jesa_lib
+
+    k = pool.num_experts
+    rng = np.random.default_rng(seed)
+    ccfg = channel_lib.ChannelConfig(num_experts=k,
+                                     num_subcarriers=max(64, k * (k - 1)))
+    gains = channel_lib.sample_channel_gains(ccfg, rng)
+    rates = channel_lib.subcarrier_rates(ccfg, gains)
+    comp = energy_lib.make_comp_coeffs(k)
+    per_q = []
+    for layer in range(1, LAYERS + 1):
+        z = low_z if start <= layer < start + span else base_z
+        g = pool.gate_scores(0, N_TOKENS, rng)
+        gates = np.zeros((k, N_TOKENS, k))
+        gates[0] = g
+        res = jesa_lib.jesa_allocate(gates, rates, z, 2, comp, 8192.0,
+                                     ccfg.tx_power_w, rng=rng)
+        per_q.append(pool.accuracy(res.alpha[0], g, 0))
+    imp = IMP_DECAY ** np.arange(1, LAYERS + 1)
+    return float((imp * np.array(per_q)).sum() / imp.sum())
+
+
+if __name__ == "__main__":
+    run()

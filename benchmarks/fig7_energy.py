@@ -1,0 +1,63 @@
+"""Figs. 7-9: per-layer energy (total / comm / comp) — JESA(gamma0) vs
+Top-2 vs homogeneous vs the LB bound, K=8 mixed-cost pool."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, avg_queries
+from repro.data.tasks import mixed_cost_pool
+
+LAYERS = 32
+N_TOKENS = 12
+N_QUERIES = 4
+
+
+def run(verbose: bool = True):
+    pool = mixed_cost_pool(k=8, num_domains=3)
+    curves = {}
+    with Timer() as t:
+        for name, kw in [
+            ("Top-2", dict(scheme="topk", top_k=2)),
+            ("H(0.5,2)", dict(scheme="homogeneous", homogeneous_z=0.5)),
+            ("JESA(0.7,2)", dict(scheme="jesa", gamma0=0.7)),
+            ("JESA(0.8,2)", dict(scheme="jesa", gamma0=0.8)),
+            ("LB(0.7,2)", dict(scheme="lb", gamma0=0.7)),
+        ]:
+            r = avg_queries(pool, domains=[0, 1, 2], n_queries=N_QUERIES,
+                            num_layers=LAYERS, n_tokens=N_TOKENS, **kw)
+            curves[name] = r
+    rows = []
+    for name, r in curves.items():
+        pl = r["per_layer_j"]
+        rows.append({
+            "scheme": name,
+            "layer1_j": float(pl[0]),
+            "layer16_j": float(pl[15]),
+            "layer32_j": float(pl[-1]),
+            "mean_j": float(pl.mean()),
+            "trend": float(pl[-1] - pl[0]),
+        })
+    if verbose:
+        print(f"{'scheme':<14}{'L1':>12}{'L16':>12}{'L32':>12}{'mean':>12}")
+        for r in rows:
+            print(f"{r['scheme']:<14}{r['layer1_j']:>12.4e}"
+                  f"{r['layer16_j']:>12.4e}{r['layer32_j']:>12.4e}"
+                  f"{r['mean_j']:>12.4e}")
+    claims = {
+        # Top-2 flat across layers; JESA declines with depth
+        "jesa_declines": rows[2]["trend"] < 0 and rows[3]["trend"] < 0,
+        "topk_flat": abs(rows[0]["trend"]) < 0.5 * max(rows[0]["mean_j"],
+                                                       1e-12),
+        "jesa_below_topk_mean": rows[2]["mean_j"] < rows[0]["mean_j"],
+        "lb_is_lowest": rows[4]["mean_j"] <= min(
+            r["mean_j"] for r in rows[:4]) + 1e-12,
+        "smaller_gamma0_drops_faster":
+            rows[2]["trend"] <= rows[3]["trend"] + 1e-12,
+    }
+    return [("fig7_energy", t.us / LAYERS,
+             ";".join(f"{k}={v}" for k, v in claims.items()))], rows, claims
+
+
+if __name__ == "__main__":
+    run()

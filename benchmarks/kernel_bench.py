@@ -1,0 +1,81 @@
+"""Micro-benchmarks of the Pallas kernels vs their jnp oracles
+(interpret mode on CPU — numbers are correctness-path timings, the
+real perf target is the TPU lowering; derived column reports allclose)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def run(verbose: bool = True):
+    rows = []
+    out_rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    q = jax.random.normal(ks[0], (1, 4, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    us, got = _time(ops.flash_attention, q, k, v, causal=True,
+                    block_q=64, block_k=64)
+    want = ref.reference_attention(q, k, v, causal=True)
+    ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-3))
+    rows.append(("kernel_flash_attention", us, f"allclose={ok}"))
+    out_rows.append({"kernel": "flash_attention", "us": us, "ok": ok})
+
+    x = jax.random.normal(ks[3], (4, 64, 128))
+    w1 = jax.random.normal(ks[4], (4, 128, 256)) * 0.05
+    wu = jax.random.normal(ks[5], (4, 128, 256)) * 0.05
+    w2 = jax.random.normal(ks[6], (4, 256, 128)) * 0.05
+    us, got = _time(ops.moe_expert_ffn, x, w1, wu, w2,
+                    block_c=32, block_f=128)
+    want = ref.reference_moe_ffn(x, w1, wu, w2)
+    ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-3))
+    rows.append(("kernel_moe_ffn", us, f"allclose={ok}"))
+    out_rows.append({"kernel": "moe_ffn", "us": us, "ok": ok})
+
+    r = jax.random.normal(ks[7], (4, 128, 32)) * 0.5
+    kk = jax.random.normal(ks[0], (4, 128, 32)) * 0.5
+    vv = jax.random.normal(ks[1], (4, 128, 32)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[2], (4, 128, 32)) * 0.3 - 0.5))
+    u = jax.random.normal(ks[3], (4, 1, 32)) * 0.3
+    us, got = _time(ops.wkv_chunked, r, kk, vv, w, u, chunk=32)
+    want = ref.reference_wkv(r, kk, vv, w, u)
+    ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-3))
+    rows.append(("kernel_rwkv_wkv", us, f"allclose={ok}"))
+    out_rows.append({"kernel": "rwkv_wkv", "us": us, "ok": ok})
+
+    qd = jax.random.normal(ks[4], (2, 8, 64))
+    kd = jax.random.normal(ks[5], (2, 2, 512, 64))
+    vd = jax.random.normal(ks[6], (2, 2, 512, 64))
+    lengths = jnp.array([300, 512], dtype=jnp.int32)
+    us, got = _time(ops.flash_decode, qd, kd, vd, lengths, block_k=128)
+    want = ref.reference_decode(qd, kd, vd, lengths)
+    ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-3))
+    rows.append(("kernel_flash_decode", us, f"allclose={ok}"))
+    out_rows.append({"kernel": "flash_decode", "us": us, "ok": ok})
+
+    if verbose:
+        for name, us, d in rows:
+            print(f"{name:<26}{us:>12.0f} us   {d}")
+    claims = {"all_allclose": all(r["ok"] for r in out_rows)}
+    return rows, out_rows, claims
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Roofline table: reads the dry-run artifacts (launch/dryrun.py must have
+run) and prints the three roofline terms per (arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Timer
+from repro.launch import roofline as rl
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_rows(mesh: str = None, include_variants: bool = False):
+    rows = []
+    if not ARTIFACTS.exists():
+        return rows
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if not include_variants and r.get("variant"):
+            continue
+        rows.append(r)
+    return rows
+
+
+def run(verbose: bool = True):
+    with Timer() as t:
+        rows = load_rows()
+    if verbose:
+        if not rows:
+            print("no dry-run artifacts found — run "
+                  "`python -m repro.launch.dryrun --all` first")
+        else:
+            print(rl.format_table(rows))
+    n_ok = len(rows)
+    claims = {"artifacts_present": n_ok > 0, "num_pairs": n_ok}
+    return [("roofline_table", t.us / max(n_ok, 1),
+             f"pairs={n_ok}")], rows, claims
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure + roofline +
+kernel micro-benches.  Prints ``name,us_per_call,derived`` CSV rows and
+exits non-zero if any paper claim fails to validate.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig7_energy]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+ALL = [
+    "expertise",
+    "table1",
+    "fig6_pattern",
+    "fig7_energy",
+    "fig10_tradeoff",
+    "theorem1",
+    "remark1_distribution",
+    "des_complexity",
+    "kernel_bench",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else ALL
+
+    import importlib
+
+    csv_rows = []
+    failed = []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        if not args.quiet:
+            print(f"\n=== {name} " + "=" * max(1, 60 - len(name)))
+        rows, _, claims = mod.run(verbose=not args.quiet)
+        csv_rows.extend(rows)
+        for cname, ok in claims.items():
+            if ok is False:
+                failed.append(f"{name}.{cname}")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if failed:
+        print(f"\nFAILED CLAIMS: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall paper claims validated")
+
+
+if __name__ == "__main__":
+    main()

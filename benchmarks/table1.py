@@ -1,0 +1,78 @@
+"""Table I: DES accuracy + relative energy vs Top-1/Top-2 on the
+multi-domain task suite (3-expert Llama-3 pool, energy normalized to
+Top-2 = 1.0)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, avg_queries
+from repro.data.tasks import DOMAINS, table1_pool
+
+N_QUERIES = 6
+N_TOKENS = 16
+LAYERS = 32
+
+
+def run(verbose: bool = True):
+    pool = table1_pool()
+    rows = []
+    with Timer() as t:
+        schemes = [
+            ("Top-1", dict(scheme="topk", top_k=1)),
+            ("Top-2", dict(scheme="topk", top_k=2)),
+            ("DES(0.6,2)", dict(scheme="jesa", gamma0=0.6, max_experts=2)),
+            ("DES(0.7,2)", dict(scheme="jesa", gamma0=0.7, max_experts=2)),
+            ("DES(0.8,2)", dict(scheme="jesa", gamma0=0.8, max_experts=2)),
+        ]
+        results = {}
+        for name, kw in schemes:
+            per_domain = {}
+            for d, dname in enumerate(DOMAINS):
+                r = avg_queries(pool, domains=[d], n_queries=N_QUERIES,
+                                num_layers=LAYERS, n_tokens=N_TOKENS, **kw)
+                per_domain[dname] = r
+            results[name] = per_domain
+
+        base = {d: results["Top-2"][d]["energy_j"] for d in DOMAINS}
+        for name, per_domain in results.items():
+            for d in DOMAINS:
+                r = per_domain[d]
+                rows.append({
+                    "scheme": name, "domain": d,
+                    "accuracy": round(100 * r["accuracy"], 1),
+                    "rel_energy": round(r["energy_j"] / base[d], 3),
+                })
+    if verbose:
+        print(f"{'scheme':<12}" + "".join(f"{d:>16}" for d in DOMAINS))
+        for name, _ in schemes:
+            accs = "".join(
+                f"{r['accuracy']:>8.1f}/{r['rel_energy']:<7.2f}"
+                for r in rows if r["scheme"] == name)
+            print(f"{name:<12}{accs}")
+    # paper claims to validate
+    acc = lambda s, d: next(r for r in rows
+                            if r["scheme"] == s and r["domain"] == d)
+    claims = {
+        "top2_beats_top1_mmlu":
+            acc("Top-2", "MMLU")["accuracy"]
+            >= acc("Top-1", "MMLU")["accuracy"] - 0.2,
+        "des_energy_below_topk": all(
+            acc(f"DES(0.{g},2)", d)["rel_energy"] < 0.6
+            for g in (6, 7, 8) for d in DOMAINS),
+        # paper's own Table I tolerates a 2.4-pt drop on MMLU-Bio
+        # (DES(0.6,2) 73.1 vs Top-2 75.5); use the same envelope
+        "des_acc_within_2p5_of_top2": all(
+            acc(f"DES(0.{g},2)", d)["accuracy"]
+            >= acc("Top-2", d)["accuracy"] - 2.5
+            for g in (7, 8) for d in DOMAINS),
+        "higher_gamma0_higher_energy": all(
+            acc("DES(0.8,2)", d)["rel_energy"]
+            >= acc("DES(0.6,2)", d)["rel_energy"] - 1e-9 for d in DOMAINS),
+    }
+    return [("table1", t.us / max(len(rows), 1),
+             ";".join(f"{k}={v}" for k, v in claims.items()))], rows, claims
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Sweep the importance factor gamma0 — the paper's tunable knob for the
+expertise/channel tradeoff — and print the accuracy-energy frontier
+(Fig. 10 in miniature).
+
+    PYTHONPATH=src python examples/jesa_tradeoff.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import avg_queries
+from repro.data.tasks import mixed_cost_pool
+
+
+def main():
+    pool = mixed_cost_pool(k=8, num_domains=3)
+    print(f"{'gamma0':>8}{'accuracy %':>12}{'energy J':>12}")
+    prev_e = None
+    for gamma0 in (0.5, 0.7, 0.9, 0.95):
+        r = avg_queries(pool, domains=[0, 1, 2], n_queries=2,
+                        num_layers=16, n_tokens=8,
+                        scheme="jesa", gamma0=gamma0)
+        print(f"{gamma0:>8}{100*r['accuracy']:>12.2f}{r['energy_j']:>12.4e}")
+        assert prev_e is None or r["energy_j"] >= prev_e * 0.7
+        prev_e = r["energy_j"]
+    print("\nlarger gamma0 -> stricter QoS deeper -> higher accuracy, "
+          "higher energy (the paper's controllable tradeoff)")
+
+
+if __name__ == "__main__":
+    main()

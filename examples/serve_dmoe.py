@@ -1,0 +1,55 @@
+"""End-to-end driver (the paper is an inference/serving paper): serve
+batched queries through the DMoE wireless-edge protocol with a real JAX
+MoE model, comparing JESA vs Top-k scheduling on the SAME model + channel.
+
+    PYTHONPATH=src python examples/serve_dmoe.py [--layers 8] [--tokens 16]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.serving import DMoESimulator
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("mixtral-8x7b")
+    cfg = cfg.with_overrides(num_layers=args.layers,
+                             moe_num_experts=4, moe_qos_gamma0=0.8)
+    rng = np.random.default_rng(args.seed)
+    tokens = rng.integers(0, cfg.vocab_size,
+                          size=(cfg.moe.num_experts, args.tokens))
+
+    print(f"DMoE: {cfg.moe.num_experts} edge nodes x {args.layers} layers, "
+          f"{args.tokens} tokens/query\n")
+    results = {}
+    for scheme in ("topk", "jesa", "lb"):
+        sim = DMoESimulator(cfg, scheme=scheme, seed=args.seed)
+        res = sim.serve(tokens)
+        results[scheme] = res
+        s = res.summary
+        print(f"{scheme:>6}: E_total {s['total_energy_j']:.4e} J  "
+              f"(comm {s['comm_energy_j']:.3e} + comp "
+              f"{s['comp_energy_j']:.3e}), "
+              f"mean experts/token {s['mean_selected']:.2f}")
+
+    # the model outputs are exact given the selection masks — show the
+    # distance between schemes' logits (JESA trades output fidelity for
+    # energy only through which experts aggregate, Eq. 8)
+    d = np.abs(results["jesa"].logits - results["topk"].logits).mean()
+    save = 1 - (results["jesa"].summary["total_energy_j"]
+                / results["topk"].summary["total_energy_j"])
+    print(f"\nJESA vs Top-k: {100*save:.0f}% energy saved, "
+          f"mean |dlogit| = {d:.3f}")
+    print("LB is the concurrent-subcarrier lower bound (C3 dropped).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import save, restore, latest_step
+
+__all__ = ["save", "restore", "latest_step"]

@@ -1,0 +1,102 @@
+"""Pytree checkpointing: npz arrays + JSON metadata, atomic writes,
+keep-last-k rotation.  bf16 leaves round-trip via ml_dtypes (numpy-
+compatible)."""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            # npz can't round-trip ml_dtypes; f32 upcast is lossless and
+            # restore() casts back to the leaf dtype.
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         metadata: Optional[Dict] = None, keep: int = 3) -> Path:
+    """Atomic save to <dir>/step_<n>/ ; rotates old checkpoints."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        arrays = _flatten(tree)
+        np.savez(tmp / "arrays.npz",
+                 **{k: v for k, v in arrays.items()})
+        meta = {"step": step, **(metadata or {})}
+        (tmp / "metadata.json").write_text(json.dumps(meta, indent=2))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _rotate(ckpt_dir, keep)
+    return final
+
+
+def _rotate(ckpt_dir: Path, keep: int):
+    steps = sorted(d for d in ckpt_dir.iterdir()
+                   if d.is_dir() and d.name.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(int(d.name.split("_")[1]) for d in ckpt_dir.iterdir()
+                   if d.is_dir() and d.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | Path, tree_like: Any,
+            step: Optional[int] = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of `tree_like` (shape/dtype checked)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz", allow_pickle=False)
+    meta = json.loads((d / "metadata.json").read_text())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in flat:
+        key = _SEP.join(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"expected {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype")
+                      else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,16 @@
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    InputShape,
+    INPUT_SHAPES,
+    ARCH_IDS,
+    ARCH_ALIASES,
+    get_config,
+    get_smoke_config,
+    all_arch_names,
+)
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "InputShape",
+           "INPUT_SHAPES", "ARCH_IDS", "ARCH_ALIASES", "get_config",
+           "get_smoke_config", "all_arch_names"]

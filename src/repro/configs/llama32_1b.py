@@ -1,0 +1,38 @@
+"""llama3.2-1b [dense] — 16L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=128256 — small llama3.  [hf:meta-llama/Llama-3.2-1B]"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    arch_type="dense",
+    source="[hf:meta-llama/Llama-3.2-1B]",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=5e5,
+    max_seq_len=131072,
+    tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="llama3.2-1b-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+        vocab_size=512,
+        dtype="float32",
+        param_dtype="float32",
+    )

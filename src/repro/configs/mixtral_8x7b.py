@@ -1,0 +1,51 @@
+"""mixtral-8x7b [moe] — the PAPER'S OWN model (§VII-A: "Using
+Mixtral-8x7B-Instruct-v0.1 as the MoE model, the DMoE system is
+initialized as Section III-A" with K=8 edge devices): 32L d_model=4096
+32H (GQA kv=8) d_ff=14336(expert) vocab=32000, 8 experts top-2.
+[hf:mistralai/Mixtral-8x7B-Instruct-v0.1]
+
+DES routing is on by default here — this config drives the paper's
+energy-efficiency experiments (Figs. 7-10)."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    arch_type="moe",
+    source="[hf:mistralai/Mixtral-8x7B-Instruct-v0.1]",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=1e6,
+    max_seq_len=32768,
+    moe=MoEConfig(
+        num_experts=8,
+        top_k=2,
+        d_ff_expert=14336,
+        routing="des",
+        qos_z=1.0,
+        qos_gamma0=0.7,
+        max_experts=2,
+    ),
+)
+
+
+def smoke() -> ModelConfig:
+    cfg = dataclasses.replace(
+        CONFIG,
+        name="mixtral-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    return cfg.with_overrides(moe_num_experts=4, moe_d_ff_expert=256)

@@ -1,0 +1,46 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 32L d_model=4096 32H (GQA kv=8)
+d_ff=6400 vocab=32064, MoE 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct]"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    arch_type="moe",
+    source="[hf:microsoft/Phi-3.5-MoE-instruct]",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    rope_theta=1e6,
+    max_seq_len=131072,
+    moe=MoEConfig(
+        num_experts=16,
+        top_k=2,
+        d_ff_expert=6400,
+        routing="topk",       # paper baseline; DES enabled via overrides
+        qos_z=1.0,
+        qos_gamma0=0.7,
+        max_experts=2,
+    ),
+)
+
+
+def smoke() -> ModelConfig:
+    cfg = dataclasses.replace(
+        CONFIG,
+        name="phi3.5-moe-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    return cfg.with_overrides(moe_num_experts=4, moe_d_ff_expert=256)

@@ -1,0 +1,39 @@
+"""rwkv6-7b [ssm] — 32L d_model=4096 (attention-free) d_ff=14336
+vocab=65536 — Finch, data-dependent decay.  [arXiv:2404.05892]
+
+The paper's expert-selection technique is inapplicable in-graph (no
+routed experts; see DESIGN.md §4) — included without the technique."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    arch_type="ssm",
+    source="[arXiv:2404.05892]",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,            # rwkv heads = d_model / head_dim
+    num_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    max_seq_len=1048576,
+    ssm=SSMConfig(kind="rwkv6", head_dim=64),
+)
+
+
+def smoke() -> ModelConfig:
+    cfg = dataclasses.replace(
+        CONFIG,
+        name="rwkv6-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=8,
+        d_ff=512,
+        vocab_size=512,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    return cfg.with_overrides(ssm_head_dim=32)

@@ -1,0 +1,35 @@
+"""stablelm-1.6b [dense] — 24L d_model=2048 32H (GQA kv=32) d_ff=5632
+vocab=100352.  [hf:stabilityai/stablelm-2-1_6b]"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    arch_type="dense",
+    source="[hf:stabilityai/stablelm-2-1_6b]",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,         # MHA
+    d_ff=5632,
+    vocab_size=100352,
+    rope_theta=1e4,
+    max_seq_len=4096,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="stablelm-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=8,
+        d_ff=512,
+        vocab_size=512,
+        dtype="float32",
+        param_dtype="float32",
+    )

@@ -1,0 +1,48 @@
+"""whisper-base [audio] — 6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865 —
+enc-dec, conv frontend STUB (input_specs provides precomputed frame
+embeddings).  [arXiv:2212.04356]
+
+Decode shapes lower the text decoder with a self-attention KV cache of the
+assigned seq_len; long_500k is SKIPPED (the whisper decoder is
+architecturally capped at 448 text positions — see DESIGN.md §5)."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="audio",
+    source="[arXiv:2212.04356]",
+    num_layers=6,            # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    rope_theta=1e4,
+    enc_dec=True,
+    encoder_layers=6,
+    encoder_max_len=1500,    # 30 s audio -> 1500 frames
+    decoder_max_len=448,
+    input_kind="frames",
+    max_seq_len=4096,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="whisper-base-smoke",
+        num_layers=2,
+        encoder_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=512,
+        encoder_max_len=64,
+        decoder_max_len=32,
+        dtype="float32",
+        param_dtype="float32",
+    )

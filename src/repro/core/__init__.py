@@ -1,0 +1,36 @@
+"""Paper core: DMoE protocol, DES expert selection, JESA scheduling.
+
+Host-side exact algorithms (numpy): `des`, `subcarrier`, `jesa`.
+In-graph jit-able routing (jnp): `selection`.
+Physical models: `channel`, `energy`; QoS schedule: `gating`.
+"""
+
+from repro.core.channel import (
+    ChannelConfig,
+    sample_channel_gains,
+    subcarrier_rates,
+    link_rates,
+    random_subcarrier_assignment,
+)
+from repro.core.energy import (
+    make_comp_coeffs,
+    selection_costs,
+    comm_energy,
+    comp_energy,
+    total_energy,
+)
+from repro.core.des import DESResult, des_select, des_select_brute_force, lp_lower_bound
+from repro.core.subcarrier import allocate_subcarriers, linear_sum_assignment
+from repro.core.jesa import JESAResult, jesa_allocate, topk_allocate, lower_bound_allocate
+from repro.core.gating import QoSSchedule, aggregate_weights, softmax_gate
+from repro.core.selection import route, greedy_des_mask, topk_mask, expert_comm_costs
+
+__all__ = [
+    "ChannelConfig", "sample_channel_gains", "subcarrier_rates", "link_rates",
+    "random_subcarrier_assignment", "make_comp_coeffs", "selection_costs",
+    "comm_energy", "comp_energy", "total_energy", "DESResult", "des_select",
+    "des_select_brute_force", "lp_lower_bound", "allocate_subcarriers",
+    "linear_sum_assignment", "JESAResult", "jesa_allocate", "topk_allocate",
+    "lower_bound_allocate", "QoSSchedule", "aggregate_weights", "softmax_gate",
+    "route", "greedy_des_mask", "topk_mask", "expert_comm_costs",
+]

@@ -1,0 +1,120 @@
+"""OFDMA wireless channel model for the DMoE system (paper §II-A).
+
+Implements Eq. (1)-(2):
+
+    r_ij^(m) = B0 * log2(1 + H_ij^(m) * P0 / N0)
+    R_ij     = sum_m beta_ij^(m) * r_ij^(m)
+
+Channel gains follow Rayleigh fading with a configurable average path loss
+(paper §VII-A2: path loss 1e-2, SNR P0/N0 = 10 dB, B0 = 1 MHz, P0 = 1e-2 W).
+
+Everything here is plain numpy — the channel model lives on the host side of
+the serving engine (the scheduler runs between jitted model stages).  A jnp
+variant of the rate equation is provided for in-graph cost proxies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Physical-layer constants (paper §VII-A2 defaults)."""
+
+    num_experts: int = 8          # K
+    num_subcarriers: int = 64     # M
+    bandwidth_hz: float = 1e6     # B0, subcarrier spacing
+    tx_power_w: float = 1e-2      # P0, per-subcarrier transmission power
+    snr_db: float = 10.0          # P0 / N0 in dB
+    avg_path_loss: float = 1e-2   # mean of |H|^2 Rayleigh fading
+
+    @property
+    def noise_power_w(self) -> float:
+        return self.tx_power_w / (10.0 ** (self.snr_db / 10.0))
+
+
+def sample_channel_gains(
+    cfg: ChannelConfig, rng: np.random.Generator
+) -> np.ndarray:
+    """Draw H_ij^(m): Rayleigh-fading power gains, shape (K, K, M).
+
+    |h|^2 for Rayleigh fading is exponential with mean = avg_path_loss.
+    The diagonal (i == j) is in-situ inference: no transmission occurs; we
+    fill it with +inf gain so downstream rate math yields zero-cost local
+    processing without special-casing.
+    """
+    k, m = cfg.num_experts, cfg.num_subcarriers
+    gains = rng.exponential(scale=cfg.avg_path_loss, size=(k, k, m))
+    idx = np.arange(k)
+    gains[idx, idx, :] = np.inf
+    return gains
+
+
+def subcarrier_rates(cfg: ChannelConfig, gains: np.ndarray) -> np.ndarray:
+    """Eq. (1): per-subcarrier achievable rates r_ij^(m), shape (K, K, M)."""
+    snr = gains * cfg.tx_power_w / cfg.noise_power_w
+    return cfg.bandwidth_hz * np.log2(1.0 + snr)
+
+
+def link_rates(rates: np.ndarray, beta: np.ndarray) -> np.ndarray:
+    """Eq. (2): R_ij = sum_m beta_ij^(m) r_ij^(m), shape (K, K).
+
+    ``beta`` is the {0,1} subcarrier assignment, shape (K, K, M).
+    The diagonal (in-situ, rate formally infinite) is returned as +inf.
+    """
+    k = rates.shape[0]
+    finite = np.where(np.isfinite(rates), rates, 0.0)
+    out = np.sum(beta * finite, axis=-1)
+    idx = np.arange(k)
+    out[idx, idx] = np.inf
+    return out
+
+
+def subcarrier_rates_jnp(
+    gains: jnp.ndarray, bandwidth_hz: float, tx_power_w: float, noise_power_w: float
+) -> jnp.ndarray:
+    """jnp twin of :func:`subcarrier_rates` for in-graph cost proxies."""
+    snr = gains * tx_power_w / noise_power_w
+    return bandwidth_hz * jnp.log2(1.0 + snr)
+
+
+def random_subcarrier_assignment(
+    cfg: ChannelConfig, rng: np.random.Generator
+) -> np.ndarray:
+    """Feasible random beta for Algorithm 2 initialization.
+
+    Assigns each of the K(K-1) directed links one distinct subcarrier
+    (requires M >= K(K-1)); remaining subcarriers unassigned.  Satisfies the
+    exclusivity constraint C3.
+    """
+    k, m = cfg.num_experts, cfg.num_subcarriers
+    n_links = k * (k - 1)
+    if m < n_links:
+        raise ValueError(
+            f"need at least K(K-1)={n_links} subcarriers for a feasible "
+            f"exclusive assignment, got M={m}"
+        )
+    beta = np.zeros((k, k, m), dtype=np.int8)
+    perm = rng.permutation(m)[:n_links]
+    links = [(i, j) for i in range(k) for j in range(k) if i != j]
+    for (i, j), sc in zip(links, perm):
+        beta[i, j, sc] = 1
+    return beta
+
+
+def validate_beta(beta: np.ndarray) -> None:
+    """Check the exclusive-subcarrier constraint C3 and binary-ness."""
+    if not np.isin(beta, (0, 1)).all():
+        raise ValueError("beta must be binary")
+    per_sc = beta.sum(axis=(0, 1))
+    if (per_sc > 1).any():
+        raise ValueError("subcarrier assigned to more than one link (C3)")
+    k = beta.shape[0]
+    if beta[np.arange(k), np.arange(k), :].sum() != 0:
+        raise ValueError("diagonal links (i==j) must not use subcarriers")

@@ -1,0 +1,251 @@
+"""Dynamic Expert Selection — Algorithm 1 (paper §V), exact host-side solver.
+
+Solves P1(a) for one (source-expert i, hidden-state n):
+
+    min_alpha  sum_j e_j * alpha_j
+    s.t. C1:   sum_j t_j * alpha_j >= z * gamma^(l)   (QoS / task relevance)
+         C2:   sum_j alpha_j <= D                     (max #experts)
+         alpha_j in {0, 1}
+
+via branch-and-bound over *exclude/include* decisions (the paper's search
+tree: the root implicitly includes all K experts; the left child excludes
+the next expert, the right child keeps it), BFS traversal, and the
+LP-relaxation lower bound of P1(b)/P1(c): sort experts by energy-to-score
+ratio e_j/t_j descending, greedily exclude while QoS is preserved, then
+exclude the *critical expert* fractionally (Eq. 11-12).
+
+Note on Eq. (12)/Algorithm-1 pseudocode: the paper's bound line reads
+``e <- e - (z - t) e_j / t_j`` which is a sign typo; the fractional
+exclusion of the critical expert removes (t - z)/t_j of it, i.e.
+``e <- e - (t - z) * e_j / t_j``.  We implement the corrected form (it is
+the unique value consistent with Eq. (11)).
+
+The problem is NP-hard (Prop. 1, knapsack reduction) so worst-case cost is
+exponential, but the bound prunes aggressively (see
+benchmarks/des_complexity.py).  A brute-force oracle is provided for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+_BIG = 1e30  # stand-in for +inf costs (unreachable experts); keeps LP math finite
+
+
+@dataclasses.dataclass
+class DESResult:
+    selected: np.ndarray          # (K,) bool mask in ORIGINAL expert order
+    energy: float                 # objective value sum_j e_j alpha_j
+    feasible: bool                # False => Remark-2 fallback (top-D) applied
+    nodes_explored: int           # B&B nodes dequeued (complexity metric)
+    nodes_pruned: int             # nodes cut by the LP bound
+
+
+def _sanitize(e: np.ndarray) -> np.ndarray:
+    e = np.asarray(e, dtype=np.float64).copy()
+    e[~np.isfinite(e)] = _BIG
+    return e
+
+
+def lp_lower_bound(t: np.ndarray, e: np.ndarray, z: float) -> float:
+    """LP relaxation value of P1(b) over experts (t, e) with QoS z.
+
+    Experts must be pre-sorted by e/t descending.  Starts from
+    all-included (score sum(t), energy sum(e)) and excludes greedily.
+    Returns 0-infeasible-safe bound; if even all-included misses z the
+    relaxation is infeasible and we return +inf is NOT correct for the
+    tree (a node is only bounded when still feasible), so we return the
+    all-included energy in that case (callers gate on feasibility first).
+    """
+    score = float(t.sum())
+    energy = float(e.sum())
+    if score < z:
+        return energy
+    for tj, ej in zip(t, e):
+        if score - tj >= z:
+            score -= tj
+            energy -= ej
+        else:
+            if tj > 0:
+                energy -= (score - z) * ej / tj
+            break
+    return energy
+
+
+def top_d_fallback(t: np.ndarray, e: np.ndarray, d: int) -> np.ndarray:
+    """Remark 2: when C1+C2 are jointly infeasible, select the Top-D by score."""
+    k = t.shape[0]
+    sel = np.zeros(k, dtype=bool)
+    sel[np.argsort(-t, kind="stable")[: min(d, k)]] = True
+    return sel
+
+
+def des_select(
+    scores: np.ndarray,
+    costs: np.ndarray,
+    qos: float,
+    max_experts: int,
+    *,
+    force_include: Optional[np.ndarray] = None,
+) -> DESResult:
+    """Exact Algorithm 1 (DES) for one hidden state.
+
+    Args:
+      scores: (K,) gate scores t_j >= 0 (need not sum to 1).
+      costs:  (K,) selection costs e_j >= 0 (inf allowed = unreachable).
+      qos:    z * gamma^(l).
+      max_experts: D.
+      force_include: optional (K,) bool — experts that must be selected
+        (e.g. a shared expert / in-situ expert); they consume D slots.
+    """
+    t = np.asarray(scores, dtype=np.float64)
+    e = _sanitize(costs)
+    k = t.shape[0]
+    d = int(max_experts)
+
+    forced = (
+        np.zeros(k, dtype=bool)
+        if force_include is None
+        else np.asarray(force_include, dtype=bool)
+    )
+
+    # Feasibility (Remark 2): can the best-score D experts cover qos?
+    top_d_score = float(np.sort(t)[::-1][:d].sum())
+    if top_d_score < qos or d < int(forced.sum()):
+        sel = top_d_fallback(t, e, d)
+        sel |= forced
+        # trim to D keeping highest scores if forced pushed us over
+        if sel.sum() > d:
+            order = np.argsort(-t, kind="stable")
+            keep = np.zeros(k, dtype=bool)
+            budget = d
+            for j in order:
+                if forced[j] and budget > 0:
+                    keep[j] = True
+                    budget -= 1
+            for j in order:
+                if sel[j] and not keep[j] and budget > 0:
+                    keep[j] = True
+                    budget -= 1
+            sel = keep
+        return DESResult(sel, float(e[sel].sum()), False, 0, 0)
+
+    # Sort by energy-to-score ratio descending (paper's branch order).
+    with np.errstate(divide="ignore"):
+        ratio = np.where(t > 0, e / np.maximum(t, 1e-300), np.inf)
+    order = np.argsort(-ratio, kind="stable")
+    ts, es = t[order], e[order]
+    forced_s = forced[order]
+
+    # B&B state: (next_idx j, score t, energy e, n_excluded, n_included,
+    #             excluded_mask_bits, included_mask_bits)
+    total_t, total_e = float(ts.sum()), float(es.sum())
+    e_min, sel_min = np.inf, None
+
+    # Seed the incumbent with a greedy integral solution so pruning bites
+    # from the start: exclude greedily (integral only) while feasible.
+    g_sel = np.ones(k, dtype=bool)
+    g_score = total_t
+    for idx in range(k):
+        if forced_s[idx]:
+            continue
+        if g_score - ts[idx] >= qos:
+            g_sel[idx] = False
+            g_score -= ts[idx]
+    if g_sel.sum() <= d:
+        e_min = float(es[g_sel].sum())
+        sel_min = g_sel.copy()
+
+    queue = deque()
+    queue.append((0, total_t, total_e, 0, 0, 0, 0))
+    explored = pruned = 0
+
+    while queue:
+        j, tt, ee, n_exc, n_inc, exc_bits, inc_bits = queue.popleft()
+        explored += 1
+
+        # Incumbent update: feasible leaf-equivalent state (C2 satisfiable
+        # only once enough exclusions are committed: |P_exc| >= K - D).
+        if tt >= qos and n_exc >= k - d and ee < e_min:
+            e_min = ee
+            sel = np.ones(k, dtype=bool)
+            for b in range(j):
+                if exc_bits >> b & 1:
+                    sel[b] = False
+            sel_min = sel
+
+        if j >= k or tt < qos:
+            continue
+
+        # LP bound over undecided experts [j, K) given committed state.
+        bound = _node_bound(j, tt, ee, qos, ts, es, inc_bits)
+        if bound >= e_min - 1e-12:
+            pruned += 1
+            continue
+
+        # Left child: exclude expert j (unless forced-in).
+        if not forced_s[j] and tt - ts[j] >= qos:
+            queue.append(
+                (j + 1, tt - ts[j], ee - es[j], n_exc + 1, n_inc,
+                 exc_bits | (1 << j), inc_bits)
+            )
+        # Right child: include expert j.
+        if n_inc + 1 <= d:
+            queue.append(
+                (j + 1, tt, ee, n_exc, n_inc + 1, exc_bits, inc_bits | (1 << j))
+            )
+
+    if sel_min is None:  # should not happen (feasibility pre-checked)
+        sel_min = top_d_fallback(t, e, d)
+        return DESResult(sel_min, float(e[sel_min].sum()), False, explored, pruned)
+
+    # Map back to original order.
+    selected = np.zeros(k, dtype=bool)
+    selected[order[sel_min]] = True
+    return DESResult(selected, float(e[selected].sum()), True, explored, pruned)
+
+
+def _node_bound(j, tt, ee, qos, ts, es, inc_bits) -> float:
+    """LP bound for the subtree at node (j, tt, ee): greedily exclude
+    undecided experts (already ratio-sorted) fractionally (Eq. 11-12)."""
+    score, energy = tt, ee
+    for idx in range(j, len(ts)):
+        # committed inclusions cannot be excluded
+        # (only indices < j can be committed, so all [j, K) are undecided)
+        tj, ej = ts[idx], es[idx]
+        if score - tj >= qos:
+            score -= tj
+            energy -= ej
+        else:
+            if tj > 0:
+                energy -= (score - qos) * ej / tj
+            break
+    return energy
+
+
+def des_select_brute_force(
+    scores: np.ndarray, costs: np.ndarray, qos: float, max_experts: int
+) -> DESResult:
+    """O(2^K) oracle for tests (K <= ~16)."""
+    t = np.asarray(scores, dtype=np.float64)
+    e = _sanitize(costs)
+    k = t.shape[0]
+    best_e, best_sel = np.inf, None
+    for bits in range(1 << k):
+        sel = np.array([(bits >> b) & 1 for b in range(k)], dtype=bool)
+        if sel.sum() > max_experts:
+            continue
+        if t[sel].sum() < qos:
+            continue
+        ee = e[sel].sum()
+        if ee < best_e:
+            best_e, best_sel = ee, sel
+    if best_sel is None:
+        sel = top_d_fallback(t, e, max_experts)
+        return DESResult(sel, float(e[sel].sum()), False, 1 << k, 0)
+    return DESResult(best_sel, float(best_e), True, 1 << k, 0)

@@ -1,0 +1,120 @@
+"""Energy consumption models for the DMoE system (paper §II-B).
+
+Eq. (3): E_ij^comm = (s_ij / R_ij) * sum_m beta_ij^(m) * P0
+Eq. (4): E_j^comp  = a_j * sum_i s_ij + b_j
+
+with s_ij = s0 * sum_n alpha_ij^(n)  (bytes of hidden states scheduled i→j),
+s0 the size of one hidden state (8 kB for 4096-dim FP16, §VII-A2), and
+(a_j, b_j) the device-j batch-linear GPU energy profile.
+
+The per-(token,source) *selection cost* used by DES (Algorithm 1 init) is
+
+    e_j = s0 * (a_j + P0 * sum_m beta_ij^(m) / R_ij)   for i != j
+    e_jj = s0 * a_j                                     (in-situ, no comm)
+
+— §V-A's reformulation constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyConfig:
+    hidden_state_bytes: float = 8192.0   # s0 (8 kB: 4096-dim FP16)
+    tx_power_w: float = 1e-2             # P0
+    comp_coeff: tuple = ()               # a_j per device (J/byte); see make_comp_coeffs
+    comp_static: tuple = ()              # b_j per device (J)
+
+
+def make_comp_coeffs(num_experts: int, per_token_j: float = 1e-3,
+                     hidden_state_bytes: float = 8192.0) -> np.ndarray:
+    """Paper §VII-A2: a_j = j * 1e-3 J/token; convert to J/byte.
+
+    The paper quotes a_j in J/token; our s_ij is in bytes, so divide by s0.
+    """
+    j = np.arange(1, num_experts + 1, dtype=np.float64)
+    return j * per_token_j / hidden_state_bytes
+
+
+def selection_costs(
+    rates_kk: np.ndarray,
+    beta: np.ndarray,
+    comp_coeff: np.ndarray,
+    s0: float,
+    p0: float,
+) -> np.ndarray:
+    """Per-source-expert selection cost matrix e[i, j] (§V-A).
+
+    e_ij = s0 * (a_j + P0 * n_sc(i,j) / R_ij), e_jj = s0 * a_j.
+    Links with zero allocated rate get +inf cost (unreachable experts).
+
+    Args:
+      rates_kk: (K, K) link rates R_ij under the current beta.
+      beta: (K, K, M) subcarrier assignment (for the subcarrier count).
+      comp_coeff: (K,) a_j in J/byte.
+      s0: hidden-state size in bytes.
+      p0: per-subcarrier transmit power.
+    """
+    k = rates_kk.shape[0]
+    n_sc = beta.sum(axis=-1).astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        comm = np.where(rates_kk > 0.0, p0 * n_sc / rates_kk, np.inf)
+    e = s0 * (comp_coeff[None, :] + comm)
+    idx = np.arange(k)
+    e[idx, idx] = s0 * comp_coeff
+    return e
+
+
+def comm_energy(
+    s_bytes: np.ndarray, rates_kk: np.ndarray, beta: np.ndarray, p0: float
+) -> float:
+    """Eq. (3) summed over all links i != j. s_bytes is (K, K)."""
+    k = s_bytes.shape[0]
+    n_sc = beta.sum(axis=-1).astype(np.float64)
+    off = ~np.eye(k, dtype=bool)
+    active = off & (s_bytes > 0)
+    if not active.any():
+        return 0.0
+    r = rates_kk[active]
+    if (r <= 0).any():
+        return float("inf")
+    return float(np.sum(s_bytes[active] / r * p0 * n_sc[active]))
+
+
+def comp_energy(
+    s_bytes: np.ndarray, comp_coeff: np.ndarray, comp_static: np.ndarray | None = None
+) -> float:
+    """Eq. (4) summed over experts j: sum_j (a_j * sum_i s_ij + b_j).
+
+    b_j is a constant offset — it does not affect any argmin over
+    selections, so schedulers may drop it; the accountant keeps it.
+    """
+    per_j = comp_coeff * s_bytes.sum(axis=0)
+    total = float(per_j.sum())
+    if comp_static is not None:
+        total += float(np.sum(comp_static))
+    return total
+
+
+def total_energy(
+    alpha: np.ndarray,
+    beta: np.ndarray,
+    rates_kk: np.ndarray,
+    comp_coeff: np.ndarray,
+    s0: float,
+    p0: float,
+    comp_static: np.ndarray | None = None,
+) -> float:
+    """Objective of P1/P2: total comm + comp energy.
+
+    alpha: (K, N, K) selection indicators alpha[i, n, j].
+    """
+    s_bytes = s0 * alpha.sum(axis=1).astype(np.float64)  # (K, K): s_ij
+    return (
+        comm_energy(s_bytes, rates_kk, beta, p0)
+        + comp_energy(s_bytes, comp_coeff, comp_static)
+    )

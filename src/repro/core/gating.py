@@ -1,0 +1,61 @@
+"""Gating, QoS schedule, and layer importance (paper §III-C, §IV-A).
+
+The QoS requirement for layer l is  z * gamma^(l)  with gamma non-increasing
+in l (lower layers matter more — Fig. 5).  The benchmark schemes use the
+geometric schedule gamma^(l) = gamma0^l (§VII-A3):
+
+    JESA(gamma0, D):  z = 1, gamma^(l) = gamma0^l
+    H(z, D):          homogeneous, gamma^(l) = 1
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSSchedule:
+    """Layer-wise QoS thresholds z * gamma^(l)."""
+
+    z: float = 1.0
+    gamma0: float = 0.7
+    homogeneous: bool = False
+    homogeneous_z: float = 0.5
+
+    def gamma(self, layer: int) -> float:
+        """gamma^(l) for 1-based layer index l."""
+        if self.homogeneous:
+            return 1.0
+        return float(self.gamma0 ** layer)
+
+    def qos(self, layer: int) -> float:
+        if self.homogeneous:
+            return self.homogeneous_z
+        return self.z * self.gamma(layer)
+
+    def qos_vector(self, num_layers: int) -> np.ndarray:
+        return np.array([self.qos(l) for l in range(1, num_layers + 1)])
+
+
+def check_gamma_monotone(schedule: QoSSchedule, num_layers: int) -> bool:
+    """Paper assumption: gamma^(l) >= gamma^(l+1) for all l."""
+    g = np.array([schedule.gamma(l) for l in range(1, num_layers + 1)])
+    return bool(np.all(np.diff(g) <= 1e-12))
+
+
+def softmax_gate(logits: jnp.ndarray) -> jnp.ndarray:
+    """Standard MoE gate (Eq. 7): nonneg scores summing to 1 over experts."""
+    import jax
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def aggregate_weights(alpha: jnp.ndarray, gates: jnp.ndarray,
+                      eps: float = 1e-9) -> jnp.ndarray:
+    """Eq. (8) combine weights: alpha_j g_j / sum_j alpha_j g_j."""
+    masked = alpha * gates
+    return masked / (jnp.sum(masked, axis=-1, keepdims=True) + eps)

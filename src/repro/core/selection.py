@@ -1,0 +1,171 @@
+"""In-graph (jit-able) expert selection — the TPU-native DES router.
+
+The exact Algorithm-1 branch-and-bound is data-dependent host control flow
+and cannot be lowered.  For in-graph routing inside `train_step` /
+`serve_step` we implement the paper's OWN relaxation (P1(b), §V-C): sort
+experts by energy-to-score ratio descending and greedily exclude while the
+QoS constraint allows, with integral rounding.  This is:
+
+  * exact whenever the LP solution is integral at the critical expert,
+  * always feasible w.r.t. C1 (falls back to Top-D per Remark 2 otherwise),
+  * C2-enforced by a final top-D-by-score trim,
+  * fully vectorized over tokens (a length-K `lax.scan` carrying only the
+    remaining-score scalar per token).
+
+Gradients: selection is a hard mask (stop-gradient semantics by
+construction — comparisons); gate weights flow through Eq.-8 combine.
+
+All functions operate on the trailing expert axis and broadcast over any
+leading (batch/seq) axes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_mask(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Standard Top-k routing mask (baseline). scores: (..., K)."""
+    n_exp = scores.shape[-1]
+    k = min(k, n_exp)
+    thresh = jax.lax.top_k(scores, k)[0][..., -1:]
+    mask = scores >= thresh
+    # break ties deterministically: keep at most k by cumulative count
+    # (ties at the threshold could select >k experts)
+    order = jnp.argsort(-scores, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    return (mask & (ranks < k)).astype(scores.dtype)
+
+
+def greedy_des_mask(
+    scores: jnp.ndarray,
+    costs: jnp.ndarray,
+    qos: jnp.ndarray | float,
+    max_experts: int,
+) -> jnp.ndarray:
+    """Vectorized greedy DES (LP-relaxation rounding) routing mask.
+
+    Args:
+      scores: (..., K) gate scores t_j (softmax output; >= 0).
+      costs: (K,) or (..., K) per-expert selection costs e_j.
+      qos: scalar or broadcastable — z * gamma^(l) for this layer.
+      max_experts: D.
+
+    Returns (..., K) {0,1} mask satisfying C2 always and C1 whenever
+    feasible (Remark-2 Top-D fallback otherwise).
+    """
+    n_exp = scores.shape[-1]
+    d = min(int(max_experts), n_exp)
+    costs = jnp.broadcast_to(costs, scores.shape).astype(jnp.float32)
+    t = scores.astype(jnp.float32)
+    qos = jnp.asarray(qos, dtype=jnp.float32)
+
+    # sort experts by cost-to-score ratio DESCENDING (worst first)
+    ratio = costs / jnp.maximum(t, 1e-9)
+    order = jnp.argsort(-ratio, axis=-1, stable=True)
+    t_sorted = jnp.take_along_axis(t, order, axis=-1)
+
+    # greedy sequential exclusion: scan over expert positions carrying the
+    # remaining score; exclude expert p iff (rem - t_p) >= qos.
+    def step(rem, t_p):
+        can_exclude = (rem - t_p) >= qos
+        rem = jnp.where(can_exclude, rem - t_p, rem)
+        return rem, can_exclude
+
+    rem0 = jnp.sum(t, axis=-1)
+    t_scan = jnp.moveaxis(t_sorted, -1, 0)  # (K, ...)
+    _, excluded = jax.lax.scan(step, rem0, t_scan)
+    excluded = jnp.moveaxis(excluded, 0, -1)  # (..., K) in sorted order
+    included_sorted = ~excluded
+
+    # scatter back to original expert order
+    inv = jnp.argsort(order, axis=-1, stable=True)
+    included = jnp.take_along_axis(
+        included_sorted.astype(jnp.float32), inv, axis=-1
+    )
+
+    # C2 trim: if more than D survive, keep the D highest-score included.
+    inc_count = jnp.sum(included, axis=-1, keepdims=True)
+    score_if_inc = jnp.where(included > 0, t, -jnp.inf)
+    topd = topk_mask(score_if_inc, d)
+    trimmed = jnp.where(inc_count > d, topd, included)
+
+    # Remark-2 fallback: if the trimmed mask misses QoS (or trim emptied
+    # it), select plain Top-D by score.
+    sel_score = jnp.sum(trimmed * t, axis=-1, keepdims=True)
+    fallback = topk_mask(t, d)
+    mask = jnp.where(sel_score + 1e-7 >= qos, trimmed, fallback)
+    return mask
+
+
+def route(
+    gate_logits: jnp.ndarray,
+    *,
+    routing: str,
+    top_k: int,
+    qos: float | jnp.ndarray = 0.5,
+    costs: Optional[jnp.ndarray] = None,
+    max_experts: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Unified router: returns (combine_weights, mask), both (..., K).
+
+    routing:
+      "topk" — standard Top-k (centralized-MoE baseline);
+      "des"  — greedy DES with per-expert costs + QoS (paper's technique);
+      "dense"— all experts (debug / upper bound).
+    combine weights follow Eq. (8): renormalized gate mass over selection.
+    """
+    gates = jax.nn.softmax(gate_logits.astype(jnp.float32), axis=-1)
+    n_exp = gates.shape[-1]
+    # The selection mask is a hard (non-differentiable) decision: sever the
+    # gradient BEFORE the sort-based mask math so no transpose rules are
+    # needed for argsort/top_k (gate gradients flow via the combine
+    # weights below instead).
+    gates_ng = jax.lax.stop_gradient(gates)
+    if routing == "topk":
+        mask = topk_mask(gates_ng, top_k)
+    elif routing == "des":
+        if costs is None:
+            costs = jnp.ones((n_exp,), dtype=jnp.float32)
+        d = max_experts if max_experts is not None else top_k
+        mask = greedy_des_mask(gates_ng, costs, qos, d)
+    elif routing == "dense":
+        mask = jnp.ones_like(gates)
+    else:
+        raise ValueError(f"unknown routing {routing!r}")
+    mask = jax.lax.stop_gradient(mask)
+    combine = mask * gates
+    combine = combine / (jnp.sum(combine, axis=-1, keepdims=True) + 1e-9)
+    return combine.astype(gate_logits.dtype), mask
+
+
+def expert_comm_costs(
+    num_experts: int,
+    experts_per_shard: int,
+    local_shard: Optional[jnp.ndarray] = None,
+    *,
+    comp_coeff: Optional[jnp.ndarray] = None,
+    intra_cost: float = 0.0,
+    inter_cost: float = 1.0,
+) -> jnp.ndarray:
+    """TPU-native per-expert cost vector for DES routing.
+
+    The wireless channel/energy cost of the paper maps, on a TPU mesh, to
+    the all-to-all bytes crossing the expert-parallel axis: an expert on
+    the token's own shard is "in-situ" (e_jj = s0 a_j, no comm) while a
+    remote expert pays the ICI hop.  `local_shard` (broadcastable int) is
+    the source shard id of the token(s); without it, a uniform inter-shard
+    cost is returned (plus the compute term).
+    """
+    shard_of_expert = jnp.arange(num_experts) // max(experts_per_shard, 1)
+    if local_shard is None:
+        comm = jnp.full((num_experts,), inter_cost, dtype=jnp.float32)
+    else:
+        local = jnp.asarray(local_shard)[..., None]
+        comm = jnp.where(shard_of_expert == local, intra_cost, inter_cost)
+    if comp_coeff is not None:
+        comm = comm + comp_coeff
+    return comm

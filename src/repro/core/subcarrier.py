@@ -1,0 +1,175 @@
+"""Optimal subcarrier allocation — P3 / P3(a) (paper §VI-A, Appendix B).
+
+For a fixed expert selection (=> scheduled bytes s_ij), communication
+energy is minimized by giving each active directed link exactly ONE
+subcarrier (Eq. 16), turning P3 into a weighted bipartite assignment:
+
+    links (i, j) with s_ij > 0   x   subcarriers m
+    edge weight w_ij^(m) = P0 * s_ij / r_ij^(m)
+
+solved optimally in polynomial time (Kuhn-Munkres / Hungarian).  scipy is
+not available offline, so we implement the shortest-augmenting-path
+Hungarian algorithm (Jonker-Volgenant style, the same algorithm behind
+scipy.optimize.linear_sum_assignment) in numpy.
+
+Fast path (Theorem 1's event A): if every active link's best subcarrier
+(argmax_m r_ij^(m)) is distinct, assigning each link its own best
+subcarrier is optimal regardless of s_ij — no Hungarian needed.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+_INF = 1e30
+
+
+def linear_sum_assignment(cost: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Minimum-cost rectangular assignment (rows <= cols).
+
+    Returns (row_idx, col_idx) like scipy's linear_sum_assignment.
+    Shortest-augmenting-path with potentials; O(n^2 m).
+    """
+    cost = np.asarray(cost, dtype=np.float64)
+    n, m = cost.shape
+    if n > m:
+        raise ValueError(f"need rows <= cols, got {cost.shape}")
+
+    u = np.zeros(n + 1)
+    v = np.zeros(m + 1)
+    p = np.zeros(m + 1, dtype=np.int64)   # p[j]: row (1-based) matched to col j
+    way = np.zeros(m + 1, dtype=np.int64)
+
+    for i in range(1, n + 1):
+        p[0] = i
+        j0 = 0
+        minv = np.full(m + 1, np.inf)
+        used = np.zeros(m + 1, dtype=bool)
+        while True:
+            used[j0] = True
+            i0 = p[j0]
+            # vectorized relaxation over unused columns
+            cols = np.nonzero(~used[1:])[0] + 1
+            cur = cost[i0 - 1, cols - 1] - u[i0] - v[cols]
+            better = cur < minv[cols]
+            minv[cols] = np.where(better, cur, minv[cols])
+            way[cols[better]] = j0
+            jt = cols[np.argmin(minv[cols])]
+            delta = minv[jt]
+            # update potentials
+            u[p[used]] += delta
+            v[used] -= delta
+            minv[~used] -= delta
+            j0 = jt
+            if p[j0] == 0:
+                break
+        # augment along the alternating path
+        while j0:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+
+    row_of_col = p[1:]  # 1-based rows, 0 = unmatched
+    cols = np.nonzero(row_of_col > 0)[0]
+    rows = row_of_col[cols] - 1
+    order = np.argsort(rows)
+    return rows[order], cols[order]
+
+
+def max_rate_assignment(rates: np.ndarray, links: np.ndarray) -> np.ndarray | None:
+    """Theorem-1 fast path: each link takes argmax_m r; valid iff all distinct.
+
+    Args:
+      rates: (K, K, M) subcarrier rates.
+      links: (L, 2) int array of active (i, j) links.
+    Returns (L,) chosen subcarriers or None if a collision exists.
+    """
+    best = np.array([int(np.argmax(rates[i, j])) for i, j in links])
+    if len(np.unique(best)) != len(best):
+        return None
+    return best
+
+
+def allocate_subcarriers(
+    s_bytes: np.ndarray,
+    rates: np.ndarray,
+    p0: float,
+    *,
+    method: str = "auto",
+) -> np.ndarray:
+    """Solve P3(a): returns beta (K, K, M) with C3 + one-subcarrier-per-link.
+
+    Args:
+      s_bytes: (K, K) scheduled bytes s_ij (diagonal ignored).
+      rates: (K, K, M) per-subcarrier rates r_ij^(m).
+      p0: per-subcarrier transmit power (scales weights; argmin-invariant
+        per link but kept for objective fidelity).
+      method: "auto" (fast path then Hungarian), "hungarian", "greedy".
+    """
+    k, _, m = rates.shape
+    beta = np.zeros((k, k, m), dtype=np.int8)
+    off_diag = ~np.eye(k, dtype=bool)
+    links = np.argwhere(off_diag & (s_bytes > 0))
+    n_links = len(links)
+    if n_links == 0:
+        return beta
+    if n_links > m:
+        raise ValueError(
+            f"{n_links} active links exceed M={m} subcarriers (C3 infeasible)"
+        )
+
+    if method == "auto":
+        fast = max_rate_assignment(rates, links)
+        if fast is not None:
+            for (i, j), sc in zip(links, fast):
+                beta[i, j, sc] = 1
+            return beta
+        method = "hungarian"
+
+    if method == "greedy":
+        # sort links by bytes desc; each takes its best free subcarrier
+        order = np.argsort(-s_bytes[links[:, 0], links[:, 1]], kind="stable")
+        free = np.ones(m, dtype=bool)
+        for li in order:
+            i, j = links[li]
+            r = np.where(free, rates[i, j], -np.inf)
+            sc = int(np.argmax(r))
+            beta[i, j, sc] = 1
+            free[sc] = False
+        return beta
+
+    if method != "hungarian":
+        raise ValueError(f"unknown method {method!r}")
+
+    w = np.empty((n_links, m), dtype=np.float64)
+    for li, (i, j) in enumerate(links):
+        r = rates[i, j]
+        with np.errstate(divide="ignore"):
+            w[li] = np.where(r > 0, p0 * s_bytes[i, j] / r, _INF)
+    rows, cols = linear_sum_assignment(w)
+    for li, sc in zip(rows, cols):
+        i, j = links[li]
+        beta[i, j, sc] = 1
+    return beta
+
+
+def assignment_energy(
+    s_bytes: np.ndarray, rates: np.ndarray, beta: np.ndarray, p0: float
+) -> float:
+    """Objective of P3(a) under a one-subcarrier-per-link beta."""
+    total = 0.0
+    k = s_bytes.shape[0]
+    for i in range(k):
+        for j in range(k):
+            if i == j or s_bytes[i, j] <= 0:
+                continue
+            sc = np.nonzero(beta[i, j])[0]
+            if len(sc) == 0:
+                return float("inf")
+            r = float((rates[i, j, sc]).sum())
+            if r <= 0:
+                return float("inf")
+            total += p0 * s_bytes[i, j] * float(len(sc)) / r
+    return total

@@ -1,0 +1,12 @@
+from repro.data.pipeline import DataConfig, lm_batch, lm_batches, domain_batch
+from repro.data.tasks import (
+    ExpertPool,
+    table1_pool,
+    mixed_cost_pool,
+    layer_qos_importance,
+    DOMAINS,
+)
+
+__all__ = ["DataConfig", "lm_batch", "lm_batches", "domain_batch",
+           "ExpertPool", "table1_pool", "mixed_cost_pool",
+           "layer_qos_importance", "DOMAINS"]

@@ -1,0 +1,12 @@
+from repro.distributed.sharding import (
+    activation_mesh,
+    constrain_btd,
+    param_specs,
+    batch_specs,
+    cache_specs,
+    named,
+    PARAM_RULES,
+)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "named",
+           "PARAM_RULES"]

@@ -1,0 +1,101 @@
+"""Expert-placement optimizer — the paper's assignment view applied to
+the TPU mesh (beyond-paper, DESIGN.md §3).
+
+The paper's P3 shows link/subcarrier matching is an assignment problem;
+on a TPU the analogous decision is WHICH experts share a shard.  Tokens
+routed to two experts on the same shard pay the all-to-all once; placing
+frequently CO-ACTIVATED experts together reduces cross-shard dispatch
+bytes — the in-graph mirror of the paper's energy-aware selection.
+
+Pipeline:
+  1. `coactivation(masks)` — E x E co-selection counts from observed
+     routing masks (e.g. a profiling run's DES/top-k selections);
+  2. `greedy_placement` — balanced grouping of E experts into G shards
+     (E/G each) maximizing intra-shard co-activation (greedy merge; the
+     balanced-partition problem is NP-hard — same complexity family the
+     paper handles with B&B, here sizes make greedy adequate);
+  3. `placement_cost` — expected cross-shard token-trips under a routing
+     distribution, the objective both placements are scored with;
+  4. `apply_placement` — permute the expert axis of MoE params + router
+     so the mesh layout realizes the chosen grouping.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def coactivation(masks: np.ndarray) -> np.ndarray:
+    """masks: (T, E) {0,1} selection masks -> (E, E) co-selection counts
+    (diagonal = per-expert load)."""
+    m = np.asarray(masks, dtype=np.float64)
+    return m.T @ m
+
+
+def placement_cost(masks: np.ndarray, groups: List[List[int]]) -> float:
+    """Expected cross-shard trips per token: for each token, the number
+    of DISTINCT shards its selected experts live on, minus 1 (the first
+    shard visit is the unavoidable dispatch)."""
+    e = masks.shape[1]
+    shard_of = np.empty(e, dtype=np.int64)
+    for g, members in enumerate(groups):
+        shard_of[members] = g
+    total = 0.0
+    for row in np.asarray(masks, dtype=bool):
+        if row.any():
+            total += len(set(shard_of[row].tolist())) - 1
+    return total / max(len(masks), 1)
+
+
+def greedy_placement(coact: np.ndarray, num_groups: int) -> List[List[int]]:
+    """Balanced grouping maximizing intra-group co-activation.
+
+    Greedy: repeatedly open a group seeded by the highest-load unassigned
+    expert, then fill it with the experts most co-activated with the
+    group's members."""
+    e = coact.shape[0]
+    assert e % num_groups == 0, "experts must divide groups"
+    size = e // num_groups
+    load = np.diag(coact).copy()
+    unassigned = set(range(e))
+    groups: List[List[int]] = []
+    for _ in range(num_groups):
+        seed = max(unassigned, key=lambda j: load[j])
+        members = [seed]
+        unassigned.remove(seed)
+        while len(members) < size:
+            best = max(
+                unassigned,
+                key=lambda j: sum(coact[j, m] for m in members))
+            members.append(best)
+            unassigned.remove(best)
+        groups.append(sorted(members))
+    return groups
+
+
+def identity_placement(e: int, num_groups: int) -> List[List[int]]:
+    size = e // num_groups
+    return [list(range(g * size, (g + 1) * size)) for g in range(num_groups)]
+
+
+def permutation(groups: List[List[int]]) -> np.ndarray:
+    """Expert permutation realizing the grouping on a contiguous-shard
+    layout: new position p holds old expert permutation[p]."""
+    return np.array([j for g in groups for j in g], dtype=np.int64)
+
+
+def apply_placement(moe_params: Dict, perm: np.ndarray) -> Dict:
+    """Permute the expert axis of an MoE layer's params (w1/wu/w2 dim 0,
+    router output dim) so the grouped experts are contiguous."""
+    import jax.numpy as jnp
+
+    out = dict(moe_params)
+    for k in ("w1", "wu", "w2"):
+        if k in out:
+            out[k] = jnp.take(out[k], jnp.asarray(perm), axis=0)
+    if "w_gate_router" in out:
+        out["w_gate_router"] = jnp.take(
+            out["w_gate_router"], jnp.asarray(perm), axis=-1)
+    return out

@@ -1,0 +1,333 @@
+"""Sharding rules: param-path patterns -> PartitionSpec, with divisibility
+fallbacks (a dim that doesn't divide its mesh axis is replicated — we never
+emit uneven shardings).
+
+Layouts:
+  * params: tensor-parallel on the "model" axis (attention heads, FFN
+    hidden, expert axis, vocab), replicated over "data"/"pod";
+  * train batch: data-parallel over ("pod", "data");
+  * KV caches (decode): batch on "data", sequence on "model"
+    (sequence-parallel decode attention — GSPMD inserts the partial-
+    softmax combine); long_500k (batch=1): sequence over ("data","model");
+  * SSM states: batch on "data", feature (d_inner / heads) on "model";
+  * optimizer moments: same spec as the param (fully sharded with it).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+# (path regex, spec template) — template entries name a MESH AXIS GROUP per
+# tensor dim: "model" | "data" | "dp" (pod+data) | None.  First match wins.
+PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embeddings / unembedding: shard vocab
+    (r"(^|/)(embed|unembed)$", ("model", None)),
+    (r"pos_embed$", (None, None)),
+    # attention (GQA + cross): shard heads
+    (r"attn/wq$|cross/wq$", (None, "model", None)),
+    (r"attn/wk$|cross/wk$", (None, "model", None)),
+    (r"attn/wv$|cross/wv$", (None, "model", None)),
+    (r"attn/wo$|cross/wo$", ("model", None, None)),
+    # MLA
+    (r"attn/wq_a$", (None, None)),
+    (r"attn/wq_b$", (None, "model", None)),
+    (r"attn/wkv_a$", (None, None)),
+    (r"attn/wkv_b$", (None, "model", None)),
+    # MoE experts: shard the expert axis (expert parallelism)
+    (r"ffn/w_gate_router$", (None, None)),
+    (r"ffn/(w1|wu|w2)$", ("model", None, None)),
+    # dense / shared-expert SwiGLU: shard hidden
+    (r"(ffn|shared)/w_gate$", (None, "model")),
+    (r"(ffn|shared)/w_up$", (None, "model")),
+    (r"(ffn|shared)/w_down$", ("model", None)),
+    # rwkv6
+    (r"att/(w_r|w_k|w_v|w_g)$", (None, "model")),
+    (r"att/w_o$", ("model", None)),
+    (r"att/(mix_a|mix_b|mu|mu_base|w0|decay_a|decay_b|u|ln_out)$", None),
+    (r"ffn/w_in$", (None, "model")),
+    (r"ffn/w_out$", ("model", None)),
+    # mamba
+    (r"mixer/w_in$", (None, "model")),
+    (r"mixer/conv_w$", (None, "model")),
+    (r"mixer/conv_b$", ("model",)),
+    (r"mixer/w_bcdt$", ("model", None)),
+    (r"mixer/w_dt$", (None, "model")),
+    (r"mixer/dt_bias$", ("model",)),
+    (r"mixer/a_log$", ("model", None)),
+    (r"mixer/d_skip$", ("model",)),
+    (r"mixer/w_out$", ("model", None)),
+    # mamba-position attention inside jamba periods
+    (r"mixer/wq$", (None, "model", None)),
+    (r"mixer/wk$", (None, "model", None)),
+    (r"mixer/wv$", (None, "model", None)),
+    (r"mixer/wo$", ("model", None, None)),
+    # everything else (norms, gates, scalars): replicate
+    (r".*", None),
+)
+
+
+def _axis(mesh: Mesh, group):
+    """Resolve an axis-group name to concrete mesh axes present in `mesh`.
+
+    group may be None, "dp" (pod+data), a single axis name, or a tuple of
+    axis names (e.g. ("data", "model") for full expert parallelism)."""
+    if group is None:
+        return None
+    if group == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    if isinstance(group, tuple):
+        axes = tuple(a for a in group if a in mesh.axis_names)
+        return axes if axes else None
+    return group if group in mesh.axis_names else None
+
+
+def _axis_size(mesh: Mesh, group) -> int:
+    if group is None:
+        return 1
+    if isinstance(group, tuple):
+        return int(np.prod([mesh.shape[a] for a in group]))
+    return mesh.shape[group]
+
+
+def _fit_spec(mesh: Mesh, template, shape, *, fsdp_bytes: int = 0,
+              itemsize: int = 2) -> P:
+    """Apply a spec template to a concrete shape with divisibility checks.
+
+    The template indexes dims from the RIGHT (templates describe the
+    trailing dims; stacked-layer leading axes are replicated).
+
+    fsdp_bytes > 0 enables FSDP-style sharding: tensors whose global size
+    exceeds the threshold additionally shard their largest still-
+    replicated dim over the "data" axis (ZeRO-3 semantics under GSPMD —
+    XLA all-gathers just-in-time).  Without it, tensor-parallel params are
+    fully replicated across "data", which cannot fit >300B models on
+    16 GB/chip."""
+    ndim = len(shape)
+    entries = [None] * ndim
+    if template is not None:
+        t = len(template)
+        for i, group in enumerate(template):
+            dim = ndim - t + i
+            if dim < 0:
+                continue
+            axes = _axis(mesh, group)
+            if axes is None:
+                continue
+            if shape[dim] % _axis_size(mesh, axes) != 0:
+                continue  # replicate rather than shard unevenly
+            entries[dim] = axes
+    if fsdp_bytes and ndim >= 2:
+        size = int(np.prod(shape)) * itemsize
+        if size > fsdp_bytes:
+            # FSDP over data (and pod when present: 2x16=32-way) —
+            # required to fit the >300B archs' model states.
+            fsdp_ax = _axis(mesh, "dp")
+            for ax in (fsdp_ax, _axis(mesh, "data")):
+                if ax is None:
+                    continue
+                cands = [d for d in range(ndim) if entries[d] is None
+                         and shape[d] % _axis_size(mesh, ax) == 0]
+                if cands:
+                    best = max(cands, key=lambda d: shape[d])
+                    entries[best] = ax
+                    break
+    return P(*entries)
+
+
+# Embedding tables must NOT be FSDP-sharded: splitting their d_model dim
+# over "data" conflicts with the batch's data-parallel sharding at the
+# token gather — GSPMD resolves the conflict by REPLICATING the batch,
+# which then propagates through the whole network (observed: 16x
+# activation blow-up on llama3.2-1b train_4k; EXPERIMENTS.md §Perf A).
+NO_FSDP_RE = r"(^|/)(embed|unembed|pos_embed)$"
+
+
+def param_specs(mesh: Mesh, params_shape: Any,
+                *, fsdp_bytes: int = 32 * 1024 * 1024,
+                rule_overrides: Optional[Dict[str, Tuple]] = None) -> Any:
+    """PartitionSpec tree for a params (or eval_shape) tree.
+
+    fsdp_bytes: threshold above which large tensors also shard over
+    "data" (see _fit_spec); pass 0 for pure tensor parallelism.
+    rule_overrides: {pattern: template} checked before PARAM_RULES —
+    matching tensors also skip FSDP (the override is authoritative)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(
+            p.key if hasattr(p, "key") else str(p) for p in path)
+        itemsize = getattr(getattr(leaf, "dtype", None), "itemsize", 2)
+        fsdp = 0 if re.search(NO_FSDP_RE, key) else fsdp_bytes
+        done = False
+        if rule_overrides:
+            for pattern, template in rule_overrides.items():
+                if re.search(pattern, key):
+                    specs.append(_fit_spec(mesh, template, leaf.shape,
+                                           fsdp_bytes=0,
+                                           itemsize=itemsize))
+                    done = True
+                    break
+        if done:
+            continue
+        for pattern, template in PARAM_RULES:
+            if re.search(pattern, key):
+                specs.append(_fit_spec(mesh, template, leaf.shape,
+                                       fsdp_bytes=fsdp,
+                                       itemsize=itemsize))
+                break
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ----------------------------------------------------------------------
+# batch / cache specs
+# ----------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, batch_shape: Any) -> Any:
+    """Training / prefill inputs: shard the batch dim over pod+data."""
+    dp = _axis(mesh, "dp") or _axis(mesh, "data")
+
+    def spec(leaf):
+        if leaf.shape and leaf.shape[0] % _axis_size(mesh, dp) == 0:
+            return P(dp, *([None] * (len(leaf.shape) - 1)))
+        return P()
+
+    return jax.tree_util.tree_map(spec, batch_shape)
+
+
+CACHE_SEQ_DIM = {"k": 1, "v": 1, "ckv": 1, "krope": 1}
+CACHE_FEATURE_RULES = {
+    # leaf name -> (batch_dim, seq_dim or None, model-shardable dim or None)
+    "k": (0, 1, 2),        # (B, S, Hkv, Dh)
+    "v": (0, 1, 2),
+    "ckv": (0, 1, None),   # (B, S, dc) — no head dim (MLA tradeoff)
+    "krope": (0, 1, None),
+    "state": (0, None, 1),  # rwkv (B, H, dk, dv)
+    "h": (0, None, 1),       # mamba (B, di, n)
+    "conv": (0, None, 2),    # (B, kconv-1, di)
+    "x_prev": (0, None, 1),
+    "x_prev_ffn": (0, None, 1),
+    "enc_out": (0, None, None),
+}
+
+
+def cache_specs(mesh: Mesh, cache_shape: Any, *, seq_on_model: bool = True,
+                batch: int = 1) -> Any:
+    """Decode caches. Dims are offset by +1 for stacked-layer leading axes
+    (detected by tree position: leaves under a stage have a leading layer
+    dim added by init_stack_cache; `idx` scalars stay replicated)."""
+    data_ax = _axis(mesh, "data")
+    model_ax = _axis(mesh, "model")
+    dp = _axis(mesh, "dp") or data_ax
+    batch_div = batch % _axis_size(mesh, data_ax or ()) == 0 if data_ax else False
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for path, leaf in flat:
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        rule = CACHE_FEATURE_RULES.get(name)
+        if rule is None or not leaf.shape:
+            specs.append(P())
+            continue
+        b_dim, s_dim, m_dim = rule
+        # detect stacked-layer leading axis: leaf ndim exceeds rule's reach
+        base_nd = max(d for d in (b_dim, s_dim, m_dim) if d is not None) + 1
+        offset = 1 if (len(leaf.shape) > base_nd and name != "enc_out") else 0
+        entries = [None] * len(leaf.shape)
+
+        if batch_div and data_ax:
+            entries[b_dim + offset] = data_ax
+            if s_dim is not None and seq_on_model and model_ax:
+                if leaf.shape[s_dim + offset] % _axis_size(mesh, model_ax) == 0:
+                    entries[s_dim + offset] = model_ax
+            elif m_dim is not None and model_ax:
+                if leaf.shape[m_dim + offset] % _axis_size(mesh, model_ax) == 0:
+                    entries[m_dim + offset] = model_ax
+        else:
+            # batch=1 (long_500k): shard sequence over everything we have
+            if s_dim is not None:
+                axes = dp if isinstance(dp, tuple) else data_ax
+                seq_axes = []
+                if axes:
+                    seq_axes.extend(axes if isinstance(axes, tuple) else [axes])
+                if seq_on_model and model_ax:
+                    seq_axes.append(model_ax)
+                seq_axes = tuple(seq_axes)
+                if seq_axes and leaf.shape[s_dim + offset] % _axis_size(
+                        mesh, seq_axes) == 0:
+                    entries[s_dim + offset] = seq_axes
+            elif m_dim is not None and model_ax:
+                if leaf.shape[m_dim + offset] % _axis_size(mesh, model_ax) == 0:
+                    entries[m_dim + offset] = model_ax
+        # SSM states with batch not divisible: still shard features
+        if not batch_div and s_dim is None and m_dim is not None and model_ax:
+            if (entries[m_dim + offset] is None
+                    and leaf.shape[m_dim + offset] % _axis_size(
+                        mesh, model_ax) == 0):
+                entries[m_dim + offset] = model_ax
+        specs.append(P(*entries))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------
+# activation sharding constraints (MaxText-style)
+# ----------------------------------------------------------------------
+# GSPMD propagation can drop the batch sharding deep inside a program
+# (e.g. after the microbatch reshape + embedding gather the batch comes
+# back REPLICATED, observed as a 16x activation blow-up).  The model
+# calls `constrain_btd` on layer-boundary activations; the launcher
+# arms it with the mesh via `activation_mesh`.
+
+_ACT_MESH: list = [None]   # [mesh or None]
+
+
+class activation_mesh:
+    """Context manager arming activation constraints with a mesh."""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self._prev = _ACT_MESH[0]
+        _ACT_MESH[0] = self.mesh
+        return self
+
+    def __exit__(self, *a):
+        _ACT_MESH[0] = self._prev
+
+
+def constrain_btd(x):
+    """Constrain a (B, S, d) activation to batch-over-(pod,data),
+    d replicated.  No-op when no mesh is armed or B doesn't divide."""
+    mesh = _ACT_MESH[0]
+    if mesh is None or x.ndim < 2:
+        return x
+    dp = _axis(mesh, "dp")
+    if dp is None or x.shape[0] % _axis_size(mesh, dp) != 0:
+        return x
+    # Degenerate case: exactly one row per device leaves no slack for the
+    # layer internals (Mamba d_inner-major layouts etc.) and forces
+    # replicate-and-repartition reshards — observed 41 -> 99 GB temp on
+    # jamba prefill_32k @ 2x16x16. Let XLA choose there.
+    if x.shape[0] // _axis_size(mesh, dp) < 2:
+        return x
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

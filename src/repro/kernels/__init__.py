@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a pure-jnp
+oracle in ref.py and a jit wrapper in ops.py:
+
+  flash_attention — blockwise online-softmax attention (causal/window/GQA)
+  flash_decode    — single-query decode attention over long KV caches
+  moe_ffn         — fused per-expert SwiGLU FFN over the capacity layout
+  rwkv_scan       — chunked RWKV6 WKV recurrence (MXU-friendly)
+"""
+
+from repro.kernels.ops import (flash_attention, flash_decode,
+                               moe_expert_ffn, wkv_chunked)
+
+__all__ = ["flash_attention", "flash_decode", "moe_expert_ffn",
+           "wkv_chunked"]

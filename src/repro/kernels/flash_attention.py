@@ -1,0 +1,135 @@
+"""Pallas-TPU flash attention kernel (causal / sliding-window / GQA).
+
+Online-softmax blockwise attention: grid (B, H, NQ, NK) with the KV-block
+axis innermost (sequential on TPU), accumulating running max / sum / out
+in VMEM scratch.  BlockSpecs tile Q/K/V into (Bq, D) / (Bk, D) VMEM
+blocks — MXU-aligned when Bq, Bk, D are multiples of 128 (D >= 64).
+
+This is the TPU adaptation of the paper-agnostic attention hot-spot: the
+HBM->VMEM tiling replaces the GPU shared-memory staging of standard
+flash attention; the (n-1)-pass max/sum rescaling is identical.
+
+Validated against ref.reference_attention in interpret mode (CPU); on a
+real TPU the same `pl.pallas_call` lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, num_k_blocks: int,
+                  kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    d = q_pos - k_pos
+    ok = k_pos < kv_len          # mask padded KV columns
+    if causal:
+        ok &= d >= 0
+    if window > 0:
+        ok &= d < window
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    m_prev = m_scr[...]                            # (Bq,)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with H % Hkv == 0.
+
+    Returns (B, H, Sq, D) in q.dtype.  Sq/Sk padded to block multiples
+    internally; GQA handled by mapping query head h -> kv head h // r.
+    """
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    r = h // hkv
+    scale = 1.0 / np.sqrt(d)
+
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(sk, 8))
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (sq + pq) // block_q
+    nk = (sk + pk) // block_k
+
+    # padded KV columns must be masked: give them positions beyond any
+    # window/causal reach by masking via k_pos >= sk inside the kernel
+    # (handled by the causal/window mask when sq == sk; for the general
+    # case we mask here by zeroing V and relying on exp(-inf)):
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_k_blocks=nk, kv_len=sk)
+
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, r_=r: (bi, hi // r_, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, r_=r: (bi, hi // r_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq + pq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq]

@@ -1,0 +1,124 @@
+"""Pallas-TPU flash-DECODE kernel: single-query attention over a long KV
+cache with sequence-split partial softmax.
+
+Decode attention (1 query token, S_kv up to 512k) is memory-bound: the
+whole cache streams through once per step.  The kernel tiles the cache
+into (Bk, D) VMEM blocks along a SEQUENTIAL grid axis, maintaining
+running (max, sum, acc) in VMEM scratch — one pass, no (Sq, Sk) buffer,
+no fp32 cache copy (bf16 blocks feed the MXU via preferred f32
+accumulation).  This is the kernel counterpart of the jnp decode path
+whose op-I/O dominates every decode row of the roofline table
+(EXPERIMENTS.md §Roofline).
+
+Grid: (B, Hkv, NK).  GQA handled by folding the R query heads of a KV
+group into the row dim of a (R, D) @ (D, Bk) matmul.
+Masking: `lengths` (B,) bounds valid cache entries; `window` bounds the
+lookback (sliding-window decode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, window: int, block_k: int,
+                   num_k_blocks: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (R, D)
+    k = k_ref[0, 0]                                # (Bk, D)
+    v = v_ref[0, 0]
+    length = len_ref[0]                            # valid cache entries
+
+    scores = jax.lax.dot_general(
+        q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (R, Bk)
+
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1)
+    ok = k_pos < length
+    if window > 0:
+        ok &= k_pos > length - 1 - window
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    m_prev = m_scr[...]                            # (R,)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, lengths, *, window: int = 0,
+                 block_k: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, D) single-token queries; k/v: (B, Hkv, S, D) caches;
+    lengths: (B,) int32 — valid entries per sequence (the write index).
+
+    Returns (B, H, D) in q.dtype.
+    """
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert h % hkv == 0
+    r = h // hkv
+    scale = 1.0 / np.sqrt(d)
+
+    block_k = min(block_k, max(s, 8))
+    pk = (-s) % block_k
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nk = (s + pk) // block_k
+
+    qg = q.reshape(b, hkv, r, d)
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, block_k=block_k,
+        num_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, r, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, ki: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r, d),
+                               lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, r, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((r,), jnp.float32),
+            pltpu.VMEM((r,), jnp.float32),
+            pltpu.VMEM((r, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(b, h, d)

@@ -1,0 +1,90 @@
+"""Pallas-TPU fused MoE expert FFN kernel (capacity layout).
+
+Computes, per expert e and capacity-row block c:
+
+    y[e, c, :] = (silu(x[e, c, :] @ w1[e]) * (x[e, c, :] @ w_up[e])) @ w2[e]
+
+Grid (E, NC, NF) with the FFN-hidden axis innermost: each step loads one
+(d, Bf) slice of w1/w_up and one (Bf, d) slice of w2 into VMEM, computes
+the partial SwiGLU activation for the current token block, and
+accumulates the down-projection into an fp32 VMEM scratch — the fused
+three-matmul pattern keeps the (C, f) activation entirely out of HBM.
+VMEM per step ~= Bc*d (x) + 2*d*Bf (w1/w_up) + Bf*d (w2) + Bc*d (acc).
+
+This is the compute hot-spot of the DMoE protocol's step 4 (expert FFN
+inference); the dispatch/combine einsums stay in XLA where SPMD lowers
+them to all-to-alls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_ffn_kernel(x_ref, w1_ref, wu_ref, w2_ref, o_ref, acc_scr, *,
+                    num_f_blocks: int):
+    fi = pl.program_id(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)               # (Bc, d)
+    w1 = w1_ref[0].astype(jnp.float32)             # (d, Bf)
+    wu = wu_ref[0].astype(jnp.float32)
+    w2 = w2_ref[0].astype(jnp.float32)             # (Bf, d)
+
+    g = jax.lax.dot_general(x, w1, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = jax.nn.silu(g) * u                         # (Bc, Bf)
+    acc_scr[...] += jax.lax.dot_general(
+        h, w2, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(fi == num_f_blocks - 1)
+    def _finalize():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_expert_ffn(x, w1, w_up, w2, *, block_c: int = 128,
+                   block_f: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """x: (E, C, d); w1/w_up: (E, d, f); w2: (E, f, d) -> (E, C, d)."""
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    pc = (-c) % block_c
+    pf = (-f) % block_f
+    if pc:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, 0)))
+    if pf:
+        w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, pf)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, pf)))
+        w2 = jnp.pad(w2, ((0, 0), (0, pf), (0, 0)))
+    nc = (c + pc) // block_c
+    nf = (f + pf) // block_f
+
+    kernel = functools.partial(_moe_ffn_kernel, num_f_blocks=nf)
+    out = pl.pallas_call(
+        kernel,
+        grid=(e, nc, nf),
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda ei, ci, fi: (ei, ci, 0)),
+            pl.BlockSpec((1, d, block_f), lambda ei, ci, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, d, block_f), lambda ei, ci, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, block_f, d), lambda ei, ci, fi: (ei, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d),
+                               lambda ei, ci, fi: (ei, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c + pc, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w_up, w2)
+    return out[:, :c]

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def reference_attention(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D). Naive softmax attention."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    r = h // hkv
+    k = jnp.repeat(k, r, axis=1)
+    v = jnp.repeat(v, r, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    dd = qp - kp
+    ok = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        ok &= dd >= 0
+    if window > 0:
+        ok &= dd < window
+    scores = jnp.where(ok, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def reference_moe_ffn(x, w1, w_up, w2) -> jnp.ndarray:
+    """x: (E, C, d); w1/w_up: (E, d, f); w2: (E, f, d)."""
+    g = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w1.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w_up.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, w2.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def reference_wkv(r, k, v, w, u) -> jnp.ndarray:
+    """Exact token-level RWKV6 scan. r/k/v/w: (BH, T, D); u: (BH, 1, D).
+
+        y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S + k v^T
+    """
+    bh, t, d = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)[:, 0]               # (BH, D)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (BH, D)
+        kv = kt[:, :, None] * vt[:, None, :]       # (BH, D, D)
+        yt = jnp.einsum("bk,bkv->bv", rt, s + uf[:, :, None] * kv)
+        s = wt[:, :, None] * s + kv
+        return s, yt
+
+    s0 = jnp.zeros((bh, d, d), jnp.float32)
+    seq = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    _, y = jax.lax.scan(step, s0, seq)
+    return jnp.moveaxis(y, 0, 1)                   # (BH, T, D)
+
+
+def reference_decode(q, k, v, lengths, *, window: int = 0) -> jnp.ndarray:
+    """Single-token decode attention oracle. q: (B,H,D); k/v: (B,Hkv,S,D);
+    lengths: (B,) valid entries. Returns (B,H,D)."""
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    r = h // hkv
+    kk = jnp.repeat(k, r, axis=1)
+    vv = jnp.repeat(v, r, axis=1)
+    scores = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / np.sqrt(d)
+    pos = jnp.arange(s)[None, None, :]
+    ok = pos < lengths[:, None, None]
+    if window > 0:
+        ok &= pos > lengths[:, None, None] - 1 - window
+    scores = jnp.where(ok, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

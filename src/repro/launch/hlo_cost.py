@@ -1,0 +1,249 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE, so any
+program built from `lax.scan` (our layer stacks, microbatch accumulation,
+chunked attention) under-reports flops/bytes/collectives by the product
+of trip counts.  This module re-derives the three roofline quantities by
+walking the post-optimization HLO text:
+
+  * computations are parsed into ops (name, type, kind, operands, attrs);
+  * a call multiplier is propagated from ENTRY: while bodies/conds
+    multiply by their `known_trip_count` backend config, fusions and
+    conditionals by 1;
+  * flops: every `dot` op contributes 2 * out_elems * contraction_size
+    (operand shapes resolved via the computation's symbol table);
+  * bytes: operand+output bytes of HBM-level ops (fusions, dots, copies,
+    slices, collectives) in non-fusion computations — fusion-internal
+    ops live in registers/VMEM and are not charged;
+  * collectives: ring-model moved bytes (same factors as roofline.py)
+    times the multiplier.
+
+The SPMD HLO is a per-device program, so all derived quantities are
+per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=\s*(.+?)\s([\w-]+)\((.*?)\)(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_HBM_KINDS = {
+    "fusion", "dot", "convolution", "copy", "dynamic-slice",
+    "dynamic-update-slice", "slice", "concatenate", "transpose",
+    "broadcast", "reduce", "reshape", "pad", "gather", "scatter", "iota",
+    "convert", "add", "multiply", "select", "compare", "rng",
+    "rng-bit-generator", "sort", "cumsum", "exponential",
+} | set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES} | {"select-and-scatter"}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    operands: List[str]
+    attrs: str
+
+
+def parse_module(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind, operand_str, attrs = m.groups()
+        operands = [o.strip().lstrip("%")
+                    for o in re.findall(r"%[\w.-]+", operand_str)]
+        comps[cur].append(Op(name, type_str, kind, operands, attrs))
+    return comps
+
+
+def _multipliers(comps: Dict[str, List[Op]]) -> Tuple[Dict[str, float],
+                                                      Dict[str, bool]]:
+    """Returns (multiplier per computation, is_fusion_body per comp)."""
+    entry = None
+    for name in comps:
+        if name.startswith(("main", "wrapped_main")) or entry is None:
+            if entry is None:
+                entry = name
+        if name.startswith("main"):
+            entry = name
+    mult = {name: 0.0 for name in comps}
+    fusion_body = {name: False for name in comps}
+    mult[entry] = 1.0
+    # propagate in passes (call graph is a DAG)
+    for _ in range(len(comps)):
+        changed = False
+        for cname, ops in comps.items():
+            m = mult.get(cname, 0.0)
+            if m <= 0:
+                continue
+            for op in ops:
+                targets: List[Tuple[str, float, bool]] = []
+                if op.kind == "while":
+                    trip = 1.0
+                    tm = _TRIP_RE.search(op.attrs)
+                    if tm:
+                        trip = float(tm.group(1))
+                    bm = _BODY_RE.search(op.attrs)
+                    cm = _COND_RE.search(op.attrs)
+                    if bm:
+                        targets.append((bm.group(1), trip, False))
+                    if cm:
+                        targets.append((cm.group(1), trip, False))
+                elif op.kind == "fusion":
+                    fm = _CALLS_RE.search(op.attrs)
+                    if fm:
+                        targets.append((fm.group(1), 1.0, True))
+                elif op.kind == "conditional":
+                    bm = _BRANCHES_RE.search(op.attrs)
+                    if bm:
+                        for t in re.findall(r"%?([\w.-]+)", bm.group(1)):
+                            targets.append((t, 1.0, False))
+                else:
+                    for fm in _CALLS_RE.finditer(op.attrs):
+                        targets.append((fm.group(1), 1.0, False))
+                for tname, factor, is_fusion in targets:
+                    if tname not in mult:
+                        continue
+                    new = m * factor
+                    if new > mult[tname]:
+                        mult[tname] = new
+                        changed = True
+                    if is_fusion:
+                        fusion_body[tname] = True
+        if not changed:
+            break
+    # fusion bodies inherit fusion-ness transitively
+    for _ in range(4):
+        for cname, ops in comps.items():
+            if not fusion_body.get(cname):
+                continue
+            for op in ops:
+                for fm in _CALLS_RE.finditer(op.attrs):
+                    if fm.group(1) in fusion_body:
+                        fusion_body[fm.group(1)] = True
+    return mult, fusion_body
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collective_ops: Dict[str, int]
+    while_count: int
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = parse_module(text)
+    mult, fusion_body = _multipliers(comps)
+
+    flops = 0.0
+    byts = 0.0
+    coll = 0.0
+    coll_ops: Dict[str, int] = {}
+    n_while = 0
+
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        symbols = {op.name: op.type_str for op in ops}
+        in_fusion = fusion_body.get(cname, False)
+        for op in ops:
+            if op.kind == "while":
+                n_while += 1
+            # ---- flops: dots (counted wherever they appear) ----------
+            if op.kind == "dot":
+                out_elems, _ = _shape_elems_bytes(op.type_str)
+                csize = 1
+                cm = _CONTRACT_RE.search(op.attrs)
+                if cm and op.operands:
+                    lhs_type = symbols.get(op.operands[0], "")
+                    dims_list = _SHAPE_RE.findall(lhs_type)
+                    if dims_list:
+                        lhs_dims = [int(d) for d in dims_list[0][1].split(",")
+                                    if d] if dims_list[0][1] else []
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(lhs_dims):
+                                csize *= lhs_dims[int(ci)]
+                flops += m * 2.0 * out_elems * csize
+            # ---- bytes: HBM-level ops only ---------------------------
+            base_kind = op.kind.replace("-start", "")
+            if not in_fusion and (op.kind in _HBM_KINDS
+                                  or base_kind in COLLECTIVES):
+                _, out_b = _shape_elems_bytes(op.type_str)
+                in_b = 0
+                for o in op.operands:
+                    _, ob = _shape_elems_bytes(symbols.get(o, ""))
+                    in_b += ob
+                byts += m * (out_b + in_b)
+            # ---- collectives ------------------------------------------
+            if base_kind in COLLECTIVES and not op.kind.endswith("-done"):
+                _, size = _shape_elems_bytes(op.type_str)
+                gm = _GROUPS_RE.search(op.attrs)
+                n = int(gm.group(2)) if gm else 2
+                frac = (n - 1) / max(n, 1)
+                if base_kind == "all-reduce":
+                    moved = 2.0 * size * frac
+                elif base_kind == "all-gather":
+                    moved = size * frac
+                elif base_kind == "reduce-scatter":
+                    moved = size * n * frac
+                elif base_kind == "all-to-all":
+                    moved = size * frac
+                else:
+                    moved = float(size)
+                coll += m * moved
+                coll_ops[base_kind] = coll_ops.get(base_kind, 0) + 1
+    return HloCost(flops=flops, bytes_accessed=byts, collective_bytes=coll,
+                   collective_ops=coll_ops, while_count=n_while)

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips (TPU v5e pod), axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries pure data parallelism across the DCN/ICI boundary.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run launcher must set XLA_FLAGS before any device query).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1x1 mesh for CPU tests/examples (same code path, no sharding)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s/link (~ per-direction)
+HBM_PER_CHIP = 16e9             # bytes

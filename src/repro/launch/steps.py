@@ -1,0 +1,127 @@
+"""Step builders shared by the trainer, the serving engine, and the
+dry-run: microbatched train step (gradient accumulation), prefill,
+decode.
+
+Microbatching bounds activation memory: per-layer scan-boundary
+activations scale with the microbatch, not the global batch — the only
+way the largest assigned archs (671B/398B, global batch 256 x 4k) fit a
+16 GB/chip pod.  Gradients accumulate in `grad_dtype` (fp32 default;
+bf16 for the >300B archs to halve the accumulator).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.optim import AdamWConfig, OptState, apply_updates
+
+
+# per-arch defaults: (n_microbatches, grad accumulation dtype)
+MICROBATCH_DEFAULTS = {
+    "deepseek-v3-671b": (16, "bfloat16"),
+    "jamba-1.5-large-398b": (16, "bfloat16"),
+    "chameleon-34b": (8, "float32"),
+    "phi3.5-moe-42b-a6.6b": (8, "float32"),
+    "glm4-9b": (4, "float32"),
+    "mistral-nemo-12b": (4, "float32"),
+    "mixtral-8x7b": (4, "float32"),
+    "whisper-base": (4, "float32"),
+    "llama3.2-1b": (2, "float32"),
+    "stablelm-1.6b": (2, "float32"),
+    "rwkv6-7b": (4, "float32"),
+}
+
+
+def microbatch_plan(cfg: ModelConfig) -> Tuple[int, str]:
+    return MICROBATCH_DEFAULTS.get(cfg.name, (1, "float32"))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    n_micro: int = 1,
+    grad_dtype: str = "float32",
+    expert_costs=None,
+    microbatch_shardings=None,
+    grad_shardings=None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    microbatch_shardings / grad_shardings: optional NamedSharding trees.
+    The (B,) -> (n_micro, B/n_micro) reshape defeats GSPMD's batch-
+    sharding propagation (dim0 shrinks below the mesh axis size and XLA
+    falls back to replicating the whole microbatch on every device);
+    explicit with_sharding_constraint on the split batch and on the
+    gradient accumulator keeps activations data-parallel inside the
+    accumulation loop.
+    """
+    gdt = jnp.bfloat16 if grad_dtype == "bfloat16" else jnp.float32
+
+    def loss(p, mb):
+        return model_lib.loss_fn(p, mb, cfg, remat=True,
+                                 expert_costs=expert_costs)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+        else:
+            def split(a):
+                b = a.shape[0]
+                assert b % n_micro == 0, (a.shape, n_micro)
+                return a.reshape(n_micro, b // n_micro, *a.shape[1:])
+
+            mb_batch = jax.tree.map(split, batch)
+            if microbatch_shardings is not None:
+                mb_batch = jax.tree.map(
+                    jax.lax.with_sharding_constraint, mb_batch,
+                    microbatch_shardings)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+            if grad_shardings is not None:
+                g0 = jax.tree.map(jax.lax.with_sharding_constraint, g0,
+                                  grad_shardings)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "ce": jnp.zeros((), jnp.float32)}
+
+            def acc(carry, mb):
+                g_acc, m_acc = carry
+                (l, metrics), g = jax.value_and_grad(
+                    loss, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(gdt), g_acc, g)
+                m_acc = {k: m_acc[k] + metrics[k] for k in m_acc}
+                return (g_acc, m_acc), None
+
+            (g_sum, m_sum), _ = jax.lax.scan(acc, (g0, m0), mb_batch)
+            grads = jax.tree.map(lambda g: (g / n_micro).astype(jnp.float32),
+                                 g_sum)
+            metrics = {k: v / n_micro for k, v in m_sum.items()}
+        params, opt_state, om = apply_updates(params, grads, opt_state,
+                                              opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, window: int = 0,
+                      expert_costs=None) -> Callable:
+    def prefill_step(params, batch, caches):
+        return model_lib.prefill(params, batch, cfg, caches, window=window,
+                                 expert_costs=expert_costs)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, window: int = 0,
+                     expert_costs=None) -> Callable:
+    def serve_step(params, token, caches):
+        return model_lib.decode_step(params, token, caches, cfg,
+                                     window=window,
+                                     expert_costs=expert_costs)
+    return serve_step

@@ -1,0 +1,16 @@
+"""Functional model zoo: dense GQA, MoE (DES routing), MLA, RWKV6, Mamba,
+Jamba hybrid periods, whisper enc-dec."""
+
+from repro.models.model import (
+    Model,
+    init_params,
+    forward,
+    loss_fn,
+    init_caches,
+    prefill,
+    decode_step,
+    input_specs,
+)
+
+__all__ = ["Model", "init_params", "forward", "loss_fn", "init_caches",
+           "prefill", "decode_step", "input_specs"]

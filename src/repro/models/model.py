@@ -1,0 +1,318 @@
+"""Top-level model: init / forward / train / prefill / decode.
+
+Pure functions over a params pytree; `Model` is a thin namespace bound to a
+ModelConfig.  Inputs:
+
+  tokens models (dense/moe/ssm/hybrid/vlm): {"tokens": (B, S) int32}
+    (chameleon's VQ image tokens are ordinary vocabulary ids — the VQ
+    tokenizer is the stubbed modality frontend);
+  audio (whisper):  {"frames": (B, S_enc, d_model) float  — precomputed
+    conv/mel frame embeddings (stub frontend), "tokens": (B, S_dec) int32}.
+
+Decode: `prefill` fills the KV caches / SSM states and returns last-token
+logits; `decode_step` consumes one token per sequence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shard_lib
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _dt(name):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    pdt = _dt(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, pdt),
+        "final_norm": L.rmsnorm_init(cfg.d_model, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embed_init(keys[1], cfg.vocab_size,
+                                         cfg.d_model, pdt)
+    plan = T.stage_plan(cfg)
+    stages = {}
+    for si, (kind, n) in enumerate(plan):
+        stages[f"stage{si}"] = T.init_stack(kind, n, keys[2 + si], cfg, pdt)
+    params["stages"] = stages
+    if cfg.mtp:
+        k_mtp1, k_mtp2 = jax.random.split(keys[5])
+        mtp_kind = "mla_dense" if cfg.mla else "dense"
+        params["mtp"] = {
+            "proj": L.dense_init(k_mtp1, 2 * cfg.d_model, cfg.d_model, pdt),
+            "norm_in": L.rmsnorm_init(2 * cfg.d_model, pdt),
+            "block": T.init_block(mtp_kind, k_mtp2, cfg, pdt),
+            "norm_out": L.rmsnorm_init(cfg.d_model, pdt),
+        }
+    if cfg.enc_dec:
+        params["encoder"] = {
+            "stack": T.init_stack("enc", cfg.encoder_layers, keys[6], cfg, pdt),
+            "norm": L.rmsnorm_init(cfg.d_model, pdt),
+            "pos_embed": (jax.random.normal(
+                keys[7], (cfg.encoder_max_len, cfg.d_model),
+                dtype=jnp.float32) * 0.02).astype(pdt),
+        }
+    return params
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+def _encode(params, frames, cfg: ModelConfig, *, remat: bool = False):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    s = frames.shape[1]
+    pos = params["encoder"]["pos_embed"]
+    if s > pos.shape[0]:
+        reps = -(-s // pos.shape[0])
+        pos = jnp.tile(pos, (reps, 1))
+    x = frames.astype(_dt(cfg.dtype)) + pos[:s]
+    x, _, _ = T.run_stack("enc", cfg.encoder_layers,
+                          params["encoder"]["stack"], x, cfg, mode="full",
+                          remat=remat)
+    return L.rmsnorm(x, params["encoder"]["norm"], cfg.norm_eps)
+
+
+def forward(
+    params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    mode: str = "full",              # "full" | "decode"
+    caches: Optional[Dict] = None,
+    window: int = 0,
+    expert_costs=None,
+    remat: bool = False,
+    _capture_hidden: Optional[list] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict], Dict]:
+    """Returns (logits, new_caches, aux)."""
+    adt = _dt(cfg.dtype)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+    x = shard_lib.constrain_btd(x)
+
+    enc_out = None
+    if cfg.enc_dec:
+        if caches is not None and "enc_out" in (caches or {}) and mode == "decode":
+            enc_out = caches["enc_out"]
+        else:
+            enc_out = _encode(params, batch["frames"], cfg, remat=remat)
+
+    new_caches: Optional[Dict] = {} if caches is not None else None
+    aux_all = {}
+    offset = 0
+    for si, (kind, n) in enumerate(T.stage_plan(cfg)):
+        stack = params["stages"][f"stage{si}"]
+        c = None if caches is None else caches[f"stage{si}"]
+        x, new_c, aux = T.run_stack(
+            kind, n, stack, x, cfg, mode=mode, cache=c, enc_out=enc_out,
+            window=window, layer_offset=offset, expert_costs=expert_costs,
+            remat=remat)
+        x = shard_lib.constrain_btd(x)
+        if new_caches is not None:
+            new_caches[f"stage{si}"] = new_c
+        aux_all[f"stage{si}"] = aux
+        offset += n * (T.jamba_period(cfg) if kind == "jamba" else 1)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if _capture_hidden is not None:
+        _capture_hidden.append(x)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table)
+    if new_caches is not None and cfg.enc_dec:
+        new_caches["enc_out"] = enc_out
+    return logits, new_caches, aux_all
+
+
+# ----------------------------------------------------------------------
+# losses / steps
+# ----------------------------------------------------------------------
+
+def _moe_aux_total(cfg: ModelConfig, aux_all) -> Tuple[jnp.ndarray, Dict]:
+    lb = jnp.zeros((), jnp.float32)
+    zl = jnp.zeros((), jnp.float32)
+    n = 0
+    for aux in aux_all.values():
+        if "load_balance_loss" in aux:
+            lb = lb + aux["load_balance_loss"]
+            zl = zl + aux["router_z_loss"]
+            n += 1
+    if n:
+        lb, zl = lb / n, zl / n
+    total = cfg.moe.aux_loss_weight * lb + cfg.moe.router_z_weight * zl
+    return total, {"load_balance_loss": lb, "router_z_loss": zl}
+
+
+def _ce(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _mtp_loss(params, hidden, batch, cfg: ModelConfig):
+    """DeepSeek-V3 depth-1 MTP: predict token t+2 from the backbone
+    state at t concatenated with the embedding of token t+1 (shared
+    embedding + unembedding; one extra block).  Serving never runs this.
+    """
+    adt = _dt(cfg.dtype)
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = hidden[:, :-1]                                 # state at t
+    nxt = jnp.take(params["embed"], tokens[:, 1:], axis=0).astype(adt)
+    mtp = params["mtp"]
+    inp = jnp.concatenate([h, nxt], axis=-1)
+    inp = L.rmsnorm(inp, mtp["norm_in"], cfg.norm_eps)
+    x = jnp.einsum("bsd,de->bse", inp, mtp["proj"])
+    kind = "mla_dense" if cfg.mla else "dense"
+    x, _, _ = T.block_forward(kind, mtp["block"], x, cfg, cfg.num_layers,
+                              mode="full")
+    x = L.rmsnorm(x, mtp["norm_out"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table)
+    # labels are next-token at each position; t+2 target = labels[t+1]
+    mtp_labels = labels[:, 1:]
+    return _ce(logits, mtp_labels)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, expert_costs=None,
+            remat: bool = True):
+    """Next-token cross-entropy (+ MoE aux + optional MTP losses)."""
+    logits, _, aux_all, hidden = _forward_with_hidden(
+        params, batch, cfg, expert_costs=expert_costs, remat=remat)
+    labels = batch["labels"]
+    ce = _ce(logits, labels)
+    aux_total, aux_log = _moe_aux_total(cfg, aux_all)
+    loss = ce + aux_total
+    metrics = {"loss": loss, "ce": ce, **aux_log}
+    if cfg.mtp and "mtp" in params:
+        mtp_ce = _mtp_loss(params, hidden, batch, cfg)
+        loss = loss + cfg.mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = loss
+    return loss, metrics
+
+
+def _forward_with_hidden(params, batch, cfg, *, expert_costs=None,
+                         remat=False):
+    """forward() that also returns the final-norm'd hidden states (the
+    MTP head consumes them; avoids a second backbone pass)."""
+    logits, _, aux_all = forward(params, batch, cfg, mode="full",
+                                 expert_costs=expert_costs, remat=remat,
+                                 _capture_hidden=_HIDDEN_SLOT)
+    hidden = _HIDDEN_SLOT.pop()
+    return logits, None, aux_all, hidden
+
+
+_HIDDEN_SLOT: list = []
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    adt = _dt(cfg.dtype)
+    caches = {}
+    for si, (kind, n) in enumerate(T.stage_plan(cfg)):
+        caches[f"stage{si}"] = T.init_stack_cache(kind, n, batch, max_len,
+                                                  cfg, adt)
+    if cfg.enc_dec:
+        caches["enc_out"] = jnp.zeros(
+            (batch, cfg.encoder_max_len, cfg.d_model), dtype=adt)
+    return caches
+
+
+def prefill(params, batch, cfg: ModelConfig, caches, *, window: int = 0,
+            expert_costs=None):
+    """Fill caches with the prompt; returns (last_logits, caches)."""
+    logits, caches, _ = forward(params, batch, cfg, mode="full",
+                                caches=caches, window=window,
+                                expert_costs=expert_costs)
+    return logits[:, -1], caches
+
+
+def decode_step(params, token, caches, cfg: ModelConfig, *, window: int = 0,
+                expert_costs=None, frames=None):
+    """One decode step. token: (B,) int32. Returns (logits (B, V), caches)."""
+    batch = {"tokens": token[:, None]}
+    logits, caches, _ = forward(params, batch, cfg, mode="decode",
+                                caches=caches, window=window,
+                                expert_costs=expert_costs)
+    return logits[:, 0], caches
+
+
+# ----------------------------------------------------------------------
+# input specs (dry-run stand-ins; no allocation)
+# ----------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                kind: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input.
+
+    kind: "train" -> {tokens, labels[, frames]};
+          "prefill" -> {tokens[, frames]};
+          "decode" -> {token} (+ caches built separately).
+    """
+    sds = jax.ShapeDtypeStruct
+    adt = _dt(cfg.dtype)
+    specs: Dict[str, Any] = {}
+    if kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            # audio: frames take the assigned seq_len; text decoder uses
+            # its architectural max (whisper: 448)
+            dec_len = min(seq_len, cfg.decoder_max_len)
+            specs["frames"] = sds((batch, seq_len, cfg.d_model), adt)
+            specs["tokens"] = sds((batch, dec_len), jnp.int32)
+            if kind == "train":
+                specs["labels"] = sds((batch, dec_len), jnp.int32)
+        else:
+            specs["tokens"] = sds((batch, seq_len), jnp.int32)
+            if kind == "train":
+                specs["labels"] = sds((batch, seq_len), jnp.int32)
+    elif kind == "decode":
+        specs["token"] = sds((batch,), jnp.int32)
+    else:
+        raise ValueError(kind)
+    return specs
+
+
+@dataclasses.dataclass
+class Model:
+    """Convenience namespace binding a config."""
+
+    cfg: ModelConfig
+
+    def init(self, key):
+        return init_params(key, self.cfg)
+
+    def loss(self, params, batch, **kw):
+        return loss_fn(params, batch, self.cfg, **kw)
+
+    def forward(self, params, batch, **kw):
+        return forward(params, batch, self.cfg, **kw)
+
+    def init_caches(self, batch: int, max_len: int):
+        return init_caches(self.cfg, batch, max_len)
+
+    def prefill(self, params, batch, caches, **kw):
+        return prefill(params, batch, self.cfg, caches, **kw)
+
+    def decode_step(self, params, token, caches, **kw):
+        return decode_step(params, token, caches, self.cfg, **kw)
+
+    def param_count(self, params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    OptState,
+    init_opt_state,
+    apply_updates,
+    lr_at,
+    global_norm,
+    clip_by_global_norm,
+)
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "apply_updates",
+           "lr_at", "global_norm", "clip_by_global_norm"]

@@ -1,0 +1,8 @@
+from repro.serving.engine import ServingEngine, Request, EngineStats
+from repro.serving.dmoe_sim import DMoESimulator, SimResult
+from repro.serving.continuous import ContinuousEngine, ContinuousStats
+from repro.serving.churn import ChurnConfig, schedule_with_churn
+
+__all__ = ["ServingEngine", "Request", "EngineStats", "DMoESimulator",
+           "SimResult", "ContinuousEngine", "ContinuousStats",
+           "ChurnConfig", "schedule_with_churn"]

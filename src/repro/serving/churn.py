@@ -1,0 +1,119 @@
+"""Ad-hoc DMoE: dynamic expert entrance/exit (paper §VIII future work).
+
+The paper's conclusion flags "the random participation of edge nodes
+incorporating the dynamic entrance and exit of experts" as the next step
+for ad-hoc DMoE assembling.  This module provides the scheduling side:
+
+  * an availability process (per-round Bernoulli churn with a minimum
+    set of survivors),
+  * masked scheduling: unavailable experts get +inf selection cost and
+    zero gate mass, so DES/JESA route around them while C1's QoS is
+    re-normalized over the live set (Remark-2 fallback applies when the
+    live Top-D cannot cover the threshold),
+  * accounting of QoS violations caused by churn.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import des as des_lib
+
+
+@dataclasses.dataclass
+class ChurnConfig:
+    p_leave: float = 0.1          # P(node offline in a round)
+    min_alive: int = 2
+    seed: int = 0
+
+
+def availability_trace(k: int, num_rounds: int, cfg: ChurnConfig,
+                       ) -> np.ndarray:
+    """(L, K) bool — True = expert available in that round."""
+    rng = np.random.default_rng(cfg.seed)
+    alive = np.ones((num_rounds, k), dtype=bool)
+    for r in range(num_rounds):
+        off = rng.random(k) < cfg.p_leave
+        if (~off).sum() < cfg.min_alive:
+            keep = rng.choice(k, size=cfg.min_alive, replace=False)
+            off[:] = True
+            off[keep] = False
+        alive[r] = ~off
+    return alive
+
+
+def masked_des_select(
+    scores: np.ndarray,
+    costs: np.ndarray,
+    alive: np.ndarray,
+    qos: float,
+    max_experts: int,
+    *,
+    renormalize_qos: bool = True,
+) -> Tuple[des_lib.DESResult, bool]:
+    """DES over the live expert set.
+
+    Unavailable experts: zero score, +inf cost.  With renormalize_qos the
+    C1 threshold is scaled by the live gate mass (the server can only
+    demand relevance from nodes that exist).  Returns (result,
+    qos_met_on_original_scale).
+    """
+    t = np.where(alive, scores, 0.0)
+    e = np.where(alive, costs, np.inf)
+    live_mass = float(t.sum())
+    q = qos * live_mass if renormalize_qos else qos
+    res = des_lib.des_select(t, e, q, max_experts)
+    # never select a dead expert, even via the Remark-2 fallback
+    if (res.selected & ~alive).any():
+        sel = res.selected & alive
+        res = des_lib.DESResult(
+            selected=sel,
+            energy=float(e[sel].sum()) if sel.any() else 0.0,
+            feasible=False,
+            nodes_explored=res.nodes_explored,
+            nodes_pruned=res.nodes_pruned,
+        )
+    qos_met = float(scores[res.selected].sum()) >= qos - 1e-12
+    return res, qos_met
+
+
+@dataclasses.dataclass
+class ChurnReport:
+    rounds: int
+    mean_alive: float
+    qos_violations: int
+    fallbacks: int
+    mean_selected: float
+
+
+def schedule_with_churn(
+    gate_rounds: np.ndarray,     # (L, N, K) per-round gate scores
+    costs: np.ndarray,           # (K,) selection costs
+    qos_per_round: np.ndarray,   # (L,)
+    max_experts: int,
+    churn: ChurnConfig,
+) -> Tuple[np.ndarray, ChurnReport]:
+    """Run DES per round under churn. Returns (alpha (L,N,K), report)."""
+    num_rounds, n_tok, k = gate_rounds.shape
+    alive = availability_trace(k, num_rounds, churn)
+    alpha = np.zeros((num_rounds, n_tok, k), dtype=np.int8)
+    violations = fallbacks = 0
+    for r in range(num_rounds):
+        for n in range(n_tok):
+            res, ok = masked_des_select(
+                gate_rounds[r, n], costs, alive[r], qos_per_round[r],
+                max_experts)
+            alpha[r, n] = res.selected.astype(np.int8)
+            violations += not ok
+            fallbacks += not res.feasible
+    report = ChurnReport(
+        rounds=num_rounds,
+        mean_alive=float(alive.mean() * k),
+        qos_violations=violations,
+        fallbacks=fallbacks,
+        mean_selected=float(alpha.sum() / (num_rounds * n_tok)),
+    )
+    return alpha, report

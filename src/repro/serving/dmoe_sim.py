@@ -1,0 +1,166 @@
+"""DMoE edge-deployment simulator — the paper's protocol end-to-end
+(§III-C, Fig. 1b).
+
+K expert nodes hold a vertically-partitioned MoE model (node j = the
+shared Attn blocks + FFN_j of every layer, Eq. 6).  Each node is assigned
+at most one query (§III-C step 1).  Per layer l (one protocol round):
+
+  1. attention + gate at each source node (in-situ, real JAX compute);
+  2. gate scores + CSI -> the scheduler ("server");
+  3. scheduler runs JESA / Top-k / homogeneous / LB -> (alpha, beta);
+  4-5. hidden states "transmitted" i->j, FFN_j applied for selected j,
+       results aggregated with Eq.-8 weights — computed exactly, with
+       the energy meter charging Eq. (3)-(4) for the traffic;
+  6. next layer.
+
+The model math is exact (the simulator produces the same logits a
+centralized run with the same per-token expert masks would); what is
+simulated is the wireless channel + energy, not the transformer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import channel as channel_lib
+from repro.core import energy as energy_lib
+from repro.core import jesa as jesa_lib
+from repro.core import protocol as proto
+from repro.core.gating import QoSSchedule
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class SimResult:
+    logits: np.ndarray                 # (K, N, V)
+    rounds: List[proto.RoundAccounting]
+    summary: Dict
+    selection_hist: np.ndarray         # (L, K) expert selection frequency
+
+
+class DMoESimulator:
+    """Serve queries through the DMoE protocol with a real (small) MoE
+    model supplying gates and FFN compute.
+
+    cfg must be an arch_type="moe" config whose num_experts == K nodes.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, scheme: str = "jesa",
+                 qos: Optional[QoSSchedule] = None,
+                 channel_cfg: Optional[channel_lib.ChannelConfig] = None,
+                 seed: int = 0, top_k: Optional[int] = None,
+                 count_backward: bool = True):
+        assert cfg.moe.num_experts >= 1 and cfg.arch_type == "moe"
+        assert not cfg.mla, "simulator uses the plain GQA MoE block"
+        self.cfg = cfg
+        self.k = cfg.moe.num_experts
+        self.scheme = scheme
+        self.qos = qos or QoSSchedule(z=cfg.moe.qos_z,
+                                      gamma0=cfg.moe.qos_gamma0)
+        self.channel_cfg = channel_cfg or channel_lib.ChannelConfig(
+            num_experts=self.k,
+            num_subcarriers=max(64, self.k * (self.k - 1)))
+        self.rng = np.random.default_rng(seed)
+        self.params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+        self.comp_coeff = energy_lib.make_comp_coeffs(self.k)
+        self.s0 = 8192.0
+        self.top_k = top_k or cfg.moe.top_k
+        self.count_backward = count_backward
+
+    # ------------------------------------------------------------------
+    def _layer_params(self, layer: int):
+        stack = self.params["stages"]["stage0"]
+        return jax.tree.map(lambda a: a[layer], stack)
+
+    def _schedule(self, gates: np.ndarray, rates: np.ndarray, layer: int,
+                  ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """gates: (K, N, E=K). Returns (alpha, beta, des_nodes)."""
+        q = self.qos.qos(layer + 1)
+        d = self.cfg.moe.max_experts or self.cfg.moe.top_k
+        if self.scheme == "topk":
+            res = jesa_lib.topk_allocate(
+                gates, rates, self.top_k, self.comp_coeff, self.s0,
+                self.channel_cfg.tx_power_w)
+        elif self.scheme == "jesa":
+            res = jesa_lib.jesa_allocate(
+                gates, rates, q, d, self.comp_coeff, self.s0,
+                self.channel_cfg.tx_power_w, rng=self.rng)
+        elif self.scheme == "homogeneous":
+            res = jesa_lib.jesa_allocate(
+                gates, rates, self.qos.homogeneous_z, d, self.comp_coeff,
+                self.s0, self.channel_cfg.tx_power_w, rng=self.rng)
+        elif self.scheme == "lb":
+            res = jesa_lib.lower_bound_allocate(
+                gates, rates, q, d, self.comp_coeff, self.s0,
+                self.channel_cfg.tx_power_w)
+        else:
+            raise ValueError(self.scheme)
+        return res.alpha, res.beta, res.des_nodes
+
+    # ------------------------------------------------------------------
+    def serve(self, tokens: np.ndarray) -> SimResult:
+        """tokens: (K, N) — one query of N tokens per expert node."""
+        cfg = self.cfg
+        k, n = tokens.shape
+        assert k == self.k, "one query per expert node (§III-C step 1)"
+
+        gains = channel_lib.sample_channel_gains(self.channel_cfg, self.rng)
+        rates = channel_lib.subcarrier_rates(self.channel_cfg, gains)
+
+        x = jnp.take(self.params["embed"], jnp.asarray(tokens), axis=0)
+        x = x.astype(jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16)
+
+        rounds: List[proto.RoundAccounting] = []
+        hist = np.zeros((cfg.num_layers, self.k))
+
+        for layer in range(cfg.num_layers):
+            p = self._layer_params(layer)
+            # -- step 2: attention + gate (in-situ) --------------------
+            h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+            a, _ = A.gqa_prefill(p["attn"], h, cfg, causal=True)
+            x = x + a
+            h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+            logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32),
+                                p["ffn"]["w_gate_router"])
+            gates = np.asarray(jax.nn.softmax(logits, axis=-1),
+                               dtype=np.float64)          # (K, N, E)
+
+            # -- step 3: joint expert & subcarrier allocation ----------
+            alpha, beta, _ = self._schedule(gates, rates, layer)
+            hist[layer] = alpha.sum(axis=(0, 1)) / max(alpha.sum(), 1)
+
+            # -- steps 4-5: forward tx + FFN + backward tx + aggregate -
+            am = jnp.asarray(alpha, dtype=jnp.float32)    # (K, N, E)
+            w = am * jnp.asarray(gates, dtype=jnp.float32)
+            w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # Eq. 8
+            g1 = jnp.einsum("bsd,edf->bsef", h, p["ffn"]["w1"])
+            u1 = jnp.einsum("bsd,edf->bsef", h, p["ffn"]["wu"])
+            hh = jax.nn.silu(g1.astype(jnp.float32)).astype(h.dtype) * u1
+            ye = jnp.einsum("bsef,efd->bsed", hh, p["ffn"]["w2"])
+            y = jnp.einsum("bsed,bse->bsd", ye.astype(jnp.float32),
+                           w).astype(x.dtype)
+            x = x + y
+
+            rounds.append(proto.account_round(
+                layer + 1, alpha, beta, rates, self.comp_coeff, self.s0,
+                self.channel_cfg.tx_power_w,
+                count_backward=self.count_backward))
+
+        x = L.rmsnorm(x, self.params["final_norm"], cfg.norm_eps)
+        table = (self.params["embed"] if cfg.tie_embeddings
+                 else self.params["unembed"])
+        logits = L.unembed(x, table)
+        return SimResult(
+            logits=np.asarray(logits, dtype=np.float32),
+            rounds=rounds,
+            summary=proto.summarize(rounds),
+            selection_hist=hist,
+        )

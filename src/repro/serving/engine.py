@@ -1,0 +1,104 @@
+"""Batched serving engine: request queue -> continuous batched prefill +
+decode with KV caches, greedy sampling, and (for MoE models) DES routing
+with per-expert cost vectors.
+
+This is the generic engine (single host, jit'd steps); the wireless-edge
+protocol variant with per-round JESA scheduling is `dmoe_sim.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import selection as sel_lib
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    batches: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.decode_tokens / self.wall_s if self.wall_s else 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
+                 max_len: int = 256, seed: int = 0,
+                 use_des_routing: Optional[bool] = None):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+        self.expert_costs = None
+        if cfg.moe.num_experts and (use_des_routing
+                                    or cfg.moe.routing == "des"):
+            self.expert_costs = sel_lib.expert_comm_costs(
+                cfg.moe.num_experts, max(cfg.moe.num_experts // 4, 1),
+                comp_coeff=jnp.linspace(0.1, 1.0, cfg.moe.num_experts))
+
+        self._prefill = jax.jit(
+            lambda p, b, c: model_lib.prefill(
+                p, b, cfg, c, expert_costs=self.expert_costs))
+        self._decode = jax.jit(
+            lambda p, t, c: model_lib.decode_step(
+                p, t, c, cfg, expert_costs=self.expert_costs))
+
+    def serve(self, requests: List[Request]) -> EngineStats:
+        """Process requests in fixed-size batches (prefill + decode loop)."""
+        stats = EngineStats()
+        t0 = time.time()
+        for i in range(0, len(requests), self.max_batch):
+            batch_reqs = requests[i: i + self.max_batch]
+            self._serve_batch(batch_reqs, stats)
+            stats.batches += 1
+        stats.wall_s = time.time() - t0
+        return stats
+
+    def _serve_batch(self, reqs: List[Request], stats: EngineStats):
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, plen), dtype=np.int32)
+        for j, r in enumerate(reqs):
+            toks[j, -len(r.prompt):] = r.prompt  # left-pad
+        caches = model_lib.init_caches(self.cfg, b, self.max_len)
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.enc_dec:
+            batch["frames"] = jnp.zeros(
+                (b, self.cfg.encoder_max_len, self.cfg.d_model))
+        t_start = time.time()
+        logits, caches = self._prefill(self.params, batch, caches)
+        stats.prefill_tokens += b * plen
+
+        n_steps = max(r.max_new_tokens for r in reqs)
+        out = np.zeros((b, n_steps), dtype=np.int32)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for s in range(n_steps):
+            out[:, s] = np.asarray(tok)
+            logits, caches = self._decode(self.params, tok, caches)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            stats.decode_tokens += b
+        dt = time.time() - t_start
+        for j, r in enumerate(reqs):
+            r.output = out[j, : r.max_new_tokens]
+            r.latency_s = dt

@@ -1,0 +1,117 @@
+"""Dynamic expert entrance/exit (paper §VIII future work) + hlo_cost
+parser properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.churn import (ChurnConfig, availability_trace,
+                                 masked_des_select, schedule_with_churn)
+
+
+def test_availability_respects_min_alive():
+    cfg = ChurnConfig(p_leave=0.95, min_alive=3, seed=1)
+    alive = availability_trace(8, 50, cfg)
+    assert (alive.sum(axis=1) >= 3).all()
+
+
+def test_masked_des_never_selects_dead():
+    rng = np.random.default_rng(0)
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        k = 6
+        t = rng.dirichlet(np.ones(k))
+        e = rng.uniform(0.1, 1.0, k)
+        alive = rng.random(k) > 0.4
+        if not alive.any():
+            alive[0] = True
+        res, _ = masked_des_select(t, e, alive, 0.5, 3)
+        assert not (res.selected & ~alive).any()
+        assert res.selected.sum() <= 3
+
+
+def test_masked_des_all_alive_matches_plain():
+    from repro.core import des as des_lib
+    rng = np.random.default_rng(3)
+    t = rng.dirichlet(np.ones(5))
+    e = rng.uniform(0.1, 1.0, 5)
+    alive = np.ones(5, dtype=bool)
+    res, ok = masked_des_select(t, e, alive, 0.4, 2, renormalize_qos=False)
+    plain = des_lib.des_select(t, e, 0.4, 2)
+    np.testing.assert_array_equal(res.selected, plain.selected)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.floats(0.0, 0.8))
+def test_property_churn_schedule_valid(seed, p):
+    rng = np.random.default_rng(seed)
+    L, N, K = 6, 3, 6
+    gates = rng.dirichlet(np.ones(K), size=(L, N))
+    costs = rng.uniform(0.05, 1.0, K)
+    qos = 0.7 ** np.arange(1, L + 1)
+    alpha, report = schedule_with_churn(
+        gates, costs, qos, max_experts=2,
+        churn=ChurnConfig(p_leave=p, min_alive=1, seed=seed))
+    assert alpha.shape == (L, N, K)
+    assert (alpha.sum(-1) <= 2).all()
+    assert (alpha.sum(-1) >= 1).all()       # always serve with someone
+    assert report.mean_alive <= K
+
+
+def test_more_churn_more_violations():
+    rng = np.random.default_rng(7)
+    L, N, K = 16, 4, 6
+    gates = rng.dirichlet(np.ones(K), size=(L, N))
+    costs = rng.uniform(0.05, 1.0, K)
+    qos = np.full(L, 0.6)
+    _, calm = schedule_with_churn(gates, costs, qos, 2,
+                                  ChurnConfig(p_leave=0.0, seed=1))
+    _, storm = schedule_with_churn(gates, costs, qos, 2,
+                                   ChurnConfig(p_leave=0.6, min_alive=1,
+                                               seed=1))
+    assert storm.qos_violations >= calm.qos_violations
+
+
+# ----------------------------------------------------------------------
+# hlo_cost parser sanity (the roofline's measurement layer)
+# ----------------------------------------------------------------------
+
+def test_hlo_cost_counts_scan_trip_counts():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.hlo_cost import analyze_hlo
+
+    def scan_mm(w, x):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(scan_mm).lower(w, x).compile().as_text()
+    c = analyze_hlo(txt)
+    assert c.flops == pytest.approx(7 * 2 * 64 ** 3)
+    assert c.while_count == 1
+
+
+def test_hlo_cost_nested_and_plain():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.hlo_cost import analyze_hlo
+
+    def nested(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            y, _ = jax.lax.scan(inner, c, None, length=3)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=2)
+        return y
+
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    txt = jax.jit(nested).lower(w, x).compile().as_text()
+    assert analyze_hlo(txt).flops == pytest.approx(6 * 2 * 32 ** 3)

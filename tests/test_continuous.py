@@ -1,0 +1,53 @@
+"""Continuous batching: staggered admissions produce the same tokens as
+isolated single-request decoding (per-sequence cache indices)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    c = get_smoke_config("llama3.2-1b")
+    return c
+
+
+def _requests(cfg, n, seed=0, lens=(5, 9, 7, 4, 8, 6)):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    size=lens[i % len(lens)]).astype(
+                                        np.int32),
+                max_new_tokens=4)
+        for i in range(n)
+    ]
+
+
+def test_continuous_matches_isolated(cfg):
+    """Every request's output under continuous batching equals the
+    output of serving it alone (greedy decoding is deterministic)."""
+    reqs = _requests(cfg, 5, seed=1)
+    eng = ContinuousEngine(cfg, slots=2, max_len=48, seed=0)
+    stats = eng.serve(reqs)
+    assert stats.admissions == 5
+    assert all(r.output is not None for r in reqs)
+
+    iso = ServingEngine(cfg, max_batch=1, max_len=48, seed=0)
+    reqs_iso = _requests(cfg, 5, seed=1)
+    iso.serve(reqs_iso)
+    for a, b in zip(reqs, reqs_iso):
+        np.testing.assert_array_equal(a.output, b.output)
+
+
+def test_continuous_overlaps_slots(cfg):
+    """With more requests than slots, occupancy must exceed 1 (true
+    batching, not sequential)."""
+    reqs = _requests(cfg, 6, seed=2)
+    eng = ContinuousEngine(cfg, slots=3, max_len=48, seed=0)
+    stats = eng.serve(reqs)
+    assert stats.mean_occupancy > 1.5
+    assert stats.decode_steps < 6 * 4   # strictly better than sequential

@@ -1,0 +1,105 @@
+"""DES (Algorithm 1) correctness: exact vs brute force, bound validity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import des as des_lib
+
+
+def _rand_instance(rng, k):
+    t = rng.dirichlet(np.ones(k))
+    e = rng.uniform(0.1, 2.0, size=k)
+    return t, e
+
+
+@pytest.mark.parametrize("seed", range(20))
+@pytest.mark.parametrize("k", [4, 6, 8, 10])
+def test_des_matches_brute_force(seed, k):
+    rng = np.random.default_rng(seed)
+    t, e = _rand_instance(rng, k)
+    qos = rng.uniform(0.1, 0.8)
+    d = rng.integers(1, k + 1)
+    exact = des_lib.des_select(t, e, qos, d)
+    brute = des_lib.des_select_brute_force(t, e, qos, d)
+    assert exact.feasible == brute.feasible
+    if exact.feasible:
+        assert exact.energy == pytest.approx(brute.energy, rel=1e-9), (
+            f"DES {exact.energy} != brute {brute.energy}"
+        )
+        # solution itself must be feasible
+        assert t[exact.selected].sum() >= qos - 1e-12
+        assert exact.selected.sum() <= d
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_des_prunes_vs_brute(seed):
+    k = 12
+    rng = np.random.default_rng(seed)
+    t, e = _rand_instance(rng, k)
+    res = des_lib.des_select(t, e, 0.5, k)
+    assert res.nodes_explored < 2 ** k, "B&B should explore fewer nodes than 2^K"
+
+
+def test_infeasible_falls_back_to_top_d():
+    # top-2 score 0.3+0.25 < 0.9 -> Remark 2 fallback
+    t = np.array([0.3, 0.25, 0.2, 0.15, 0.1])
+    e = np.ones(5)
+    res = des_lib.des_select(t, e, 0.9, 2)
+    assert not res.feasible
+    assert res.selected.sum() == 2
+    assert set(np.nonzero(res.selected)[0]) == {0, 1}
+
+
+def test_unreachable_expert_avoided():
+    t = np.array([0.5, 0.5])
+    e = np.array([np.inf, 0.1])
+    res = des_lib.des_select(t, e, 0.4, 2)
+    assert res.feasible
+    assert res.selected.tolist() == [False, True]
+
+
+def test_in_situ_expert_preferred():
+    # equal scores, expert 0 free (in-situ) -> must pick 0
+    t = np.array([1 / 3, 1 / 3, 1 / 3])
+    e = np.array([0.0, 1.0, 1.0])
+    res = des_lib.des_select(t, e, 0.3, 1)
+    assert res.selected.tolist() == [True, False, False]
+    assert res.energy == 0.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    k=st.integers(3, 9),
+    seed=st.integers(0, 2**31 - 1),
+    qos=st.floats(0.05, 0.95),
+    d=st.integers(1, 9),
+)
+def test_property_des_optimal_and_feasible(k, seed, qos, d):
+    d = min(d, k)
+    rng = np.random.default_rng(seed)
+    t = rng.dirichlet(np.ones(k))
+    e = rng.uniform(0.01, 5.0, size=k)
+    exact = des_lib.des_select(t, e, qos, d)
+    brute = des_lib.des_select_brute_force(t, e, qos, d)
+    assert exact.feasible == brute.feasible
+    if exact.feasible:
+        np.testing.assert_allclose(exact.energy, brute.energy, rtol=1e-9)
+        assert exact.selected.sum() <= d
+        assert t[exact.selected].sum() >= qos - 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(k=st.integers(2, 10), seed=st.integers(0, 2**31 - 1))
+def test_property_lp_bound_is_lower_bound(k, seed):
+    """The LP relaxation never exceeds the integral optimum (sound pruning)."""
+    rng = np.random.default_rng(seed)
+    t = rng.dirichlet(np.ones(k))
+    e = rng.uniform(0.01, 5.0, size=k)
+    qos = float(rng.uniform(0.05, 0.95))
+    ratio = e / np.maximum(t, 1e-300)
+    order = np.argsort(-ratio)
+    bound = des_lib.lp_lower_bound(t[order], e[order], qos)
+    brute = des_lib.des_select_brute_force(t, e, qos, k)
+    if brute.feasible:
+        assert bound <= brute.energy + 1e-9

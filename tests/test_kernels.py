@@ -1,0 +1,226 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-4, rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,sq,sk,d", [
+    (1, 2, 2, 16, 16, 8),       # MHA tiny
+    (2, 4, 2, 64, 64, 32),      # GQA
+    (1, 8, 1, 40, 40, 16),      # MQA, non-multiple seq (padding)
+    (2, 2, 2, 33, 65, 64),      # cross-length, padding both
+])
+def test_flash_attention_sweep(dtype, b, h, hkv, sq, sk, d):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype=dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype=dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype=dtype)
+    causal = sq == sk
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    want = ref.reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [1, 4, 16, 100])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 48, 16))
+    k = jax.random.normal(ks[1], (1, 2, 48, 16))
+    v = jax.random.normal(ks[2], (1, 2, 48, 16))
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=16, block_k=16)
+    want = ref.reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sq=st.integers(4, 80),
+    hkv=st.sampled_from([1, 2, 4]),
+    rep=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 1000),
+)
+def test_property_flash_attention(sq, hkv, rep, seed):
+    d = 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, hkv * rep, sq, d))
+    k = jax.random.normal(ks[1], (1, hkv, sq, d))
+    v = jax.random.normal(ks[2], (1, hkv, sq, d))
+    got = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    want = ref.reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# fused MoE expert FFN
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f,bc,bf", [
+    (2, 16, 32, 64, 8, 16),
+    (4, 40, 64, 96, 16, 32),     # padding in both c and f
+    (1, 8, 128, 256, 8, 256),
+    (8, 20, 16, 48, 32, 16),     # block_c > c
+])
+def test_moe_ffn_sweep(dtype, e, c, d, f, bc, bf):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (e, c, d), dtype=dtype)
+    w1 = (jax.random.normal(ks[1], (e, d, f)) * 0.1).astype(dtype)
+    wu = (jax.random.normal(ks[2], (e, d, f)) * 0.1).astype(dtype)
+    w2 = (jax.random.normal(ks[3], (e, f, d)) * 0.1).astype(dtype)
+    got = ops.moe_expert_ffn(x, w1, wu, w2, block_c=bc, block_f=bf)
+    want = ref.reference_moe_ffn(x, w1, wu, w2)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    e=st.integers(1, 4), c=st.integers(1, 24),
+    d=st.sampled_from([16, 32]), f=st.sampled_from([32, 48]),
+    seed=st.integers(0, 1000),
+)
+def test_property_moe_ffn(e, c, d, f, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (e, c, d))
+    w1 = jax.random.normal(ks[1], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (e, d, f)) * 0.1
+    w2 = jax.random.normal(ks[3], (e, f, d)) * 0.1
+    got = ops.moe_expert_ffn(x, w1, wu, w2, block_c=8, block_f=16)
+    want = ref.reference_moe_ffn(x, w1, wu, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# RWKV6 chunked WKV scan
+# ----------------------------------------------------------------------
+
+def _wkv_inputs(seed, bh, t, d, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = (jax.random.normal(ks[0], (bh, t, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (bh, t, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (bh, t, d)) * 0.5).astype(dtype)
+    # RWKV6-style decay: w = exp(-exp(x)) in (0, 1)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (bh, t, d)) * 0.3 - 0.5)
+                ).astype(dtype)
+    u = (jax.random.normal(ks[4], (bh, 1, d)) * 0.3).astype(dtype)
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("bh,t,d,chunk", [
+    (2, 32, 8, 8),
+    (4, 48, 16, 16),
+    (1, 50, 32, 16),     # padding in t
+    (3, 7, 8, 16),       # chunk > t
+])
+def test_wkv_sweep(bh, t, d, chunk):
+    r, k, v, w, u = _wkv_inputs(3, bh, t, d)
+    got = ops.wkv_chunked(r, k, v, w, u, chunk=chunk)
+    want = ref.reference_wkv(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-4, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(2, 64), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 1000))
+def test_property_wkv(t, d, seed):
+    r, k, v, w, u = _wkv_inputs(seed, 2, t, d)
+    got = ops.wkv_chunked(r, k, v, w, u, chunk=8)
+    want = ref.reference_wkv(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=2e-3)
+
+
+def test_wkv_state_continuity():
+    """Chunk boundaries must not reset state: one big call == the oracle
+    on the full sequence (which has no chunk concept)."""
+    r, k, v, w, u = _wkv_inputs(7, 1, 40, 8)
+    got8 = ops.wkv_chunked(r, k, v, w, u, chunk=8)
+    got40 = ops.wkv_chunked(r, k, v, w, u, chunk=40)
+    np.testing.assert_allclose(np.asarray(got8), np.asarray(got40),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_model_rwkv_matches_kernel():
+    """The model's rwkv6_mix scan must agree with the Pallas kernel on
+    the same (r, k, v, w, u) inputs."""
+    r, k, v, w, u = _wkv_inputs(11, 2, 24, 8)
+    got = ops.wkv_chunked(r, k, v, w, u, chunk=8)
+    want = ref.reference_wkv(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-4, rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# flash decode (single-query attention over long caches)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,s,d,bk", [
+    (2, 4, 2, 64, 16, 16),
+    (1, 8, 8, 100, 32, 32),     # MHA, padding in s
+    (3, 4, 1, 48, 16, 64),      # MQA, block_k > s
+])
+def test_flash_decode_sweep(dtype, b, h, hkv, s, d, bk):
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(ks[0], (b, h, d), dtype=dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype=dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype=dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    got = ops.flash_decode(q, k, v, lengths, block_k=bk)
+    want = ref.reference_decode(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [1, 8, 1000])
+def test_flash_decode_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = jax.random.normal(ks[0], (2, 4, 16))
+    k = jax.random.normal(ks[1], (2, 2, 64, 16))
+    v = jax.random.normal(ks[2], (2, 2, 64, 16))
+    lengths = jnp.array([40, 64], dtype=jnp.int32)
+    got = ops.flash_decode(q, k, v, lengths, window=window, block_k=16)
+    want = ref.reference_decode(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(s=st.integers(4, 96), hkv=st.sampled_from([1, 2]),
+       rep=st.sampled_from([1, 3]), seed=st.integers(0, 1000))
+def test_property_flash_decode(s, hkv, rep, seed):
+    d = 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (1, hkv * rep, d))
+    k = jax.random.normal(ks[1], (1, hkv, s, d))
+    v = jax.random.normal(ks[2], (1, hkv, s, d))
+    lengths = jax.random.randint(ks[3], (1,), 1, s + 1)
+    got = ops.flash_decode(q, k, v, lengths, block_k=16)
+    want = ref.reference_decode(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-3)

@@ -1,0 +1,96 @@
+"""In-graph DES router (jnp greedy) vs host-side exact DES + invariants."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import des as des_lib
+from repro.core import selection as sel_lib
+
+
+def test_topk_mask_basic():
+    s = jnp.array([[0.1, 0.5, 0.2, 0.2], [0.25, 0.25, 0.25, 0.25]])
+    m = sel_lib.topk_mask(s, 2)
+    assert m.shape == s.shape
+    np.testing.assert_array_equal(np.sum(np.asarray(m), -1), [2, 2])
+    assert m[0, 1] == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    k=st.integers(3, 12),
+    seed=st.integers(0, 2**31 - 1),
+    qos=st.floats(0.05, 0.9),
+    d=st.integers(1, 12),
+)
+def test_property_greedy_des_feasible_and_bounded(k, seed, qos, d):
+    """Greedy mask always satisfies C2; satisfies C1 whenever the exact
+    solver says the instance is feasible; never beats the exact optimum."""
+    d = min(d, k)
+    rng = np.random.default_rng(seed)
+    t = rng.dirichlet(np.ones(k)).astype(np.float32)
+    e = rng.uniform(0.01, 3.0, size=k).astype(np.float32)
+    mask = np.asarray(sel_lib.greedy_des_mask(jnp.array(t), jnp.array(e), qos, d))
+    assert mask.shape == (k,)
+    assert mask.sum() <= d + 1e-6
+    exact = des_lib.des_select(t.astype(np.float64), e.astype(np.float64), qos, d)
+    if exact.feasible:
+        sel_score = float((mask * t).sum())
+        assert sel_score >= qos - 1e-5, (sel_score, qos)
+        greedy_energy = float((mask * e).sum())
+        assert greedy_energy >= exact.energy - 1e-5  # exact is optimal
+
+
+def test_greedy_matches_exact_on_easy_instance():
+    # widely separated ratios -> LP integral -> greedy == exact
+    t = np.array([0.5, 0.3, 0.15, 0.05], dtype=np.float32)
+    e = np.array([0.01, 0.02, 10.0, 20.0], dtype=np.float32)
+    mask = np.asarray(sel_lib.greedy_des_mask(jnp.array(t), jnp.array(e), 0.75, 4))
+    exact = des_lib.des_select(t, e, 0.75, 4)
+    np.testing.assert_array_equal(mask.astype(bool), exact.selected)
+
+
+def test_route_combine_weights_eq8():
+    logits = jnp.array([[1.0, 2.0, 0.5, -1.0]])
+    combine, mask = sel_lib.route(logits, routing="topk", top_k=2)
+    c = np.asarray(combine)[0]
+    m = np.asarray(mask)[0]
+    assert m.sum() == 2
+    np.testing.assert_allclose(c.sum(), 1.0, rtol=1e-5)
+    assert (c[m == 0] == 0).all()
+
+
+def test_route_des_jit_compiles():
+    logits = jnp.ones((4, 8, 16))
+    costs = jnp.linspace(0.1, 1.0, 16)
+
+    @jax.jit
+    def f(lg):
+        return sel_lib.route(lg, routing="des", top_k=2, qos=0.3,
+                             costs=costs, max_experts=2)
+
+    combine, mask = f(logits)
+    assert combine.shape == logits.shape
+    assert not np.isnan(np.asarray(combine)).any()
+    assert (np.asarray(mask).sum(-1) <= 2).all()
+
+
+def test_des_routing_prefers_cheap_experts_under_slack_qos():
+    # uniform scores, low qos -> cheapest expert wins
+    logits = jnp.zeros((1, 8))
+    costs = jnp.array([5.0, 4.0, 3.0, 2.0, 1.0, 0.5, 0.2, 0.1])
+    combine, mask = sel_lib.route(
+        logits, routing="des", top_k=2, qos=0.12, costs=costs, max_experts=2
+    )
+    m = np.asarray(mask)[0]
+    assert m[7] == 1  # cheapest selected
+    assert m[:4].sum() == 0  # expensive ones dropped
+
+
+def test_expert_comm_costs_in_situ_zero():
+    c = sel_lib.expert_comm_costs(8, 2, local_shard=jnp.array(1))
+    c = np.asarray(c)
+    np.testing.assert_array_equal(c[2:4], 0.0)   # shard 1 experts: in-situ
+    assert (c[:2] == 1.0).all() and (c[4:] == 1.0).all()

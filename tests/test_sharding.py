@@ -1,0 +1,127 @@
+"""Sharding rules: spec assignment, divisibility fallbacks, FSDP
+threshold, cache layouts.  Uses an abstract 16x16-shaped mesh over 1 CPU
+device? No — specs are pure metadata; we build a real (1,1) mesh for
+NamedSharding and a FAKE axis-size mesh via jax.sharding.Mesh on
+device arrays is not possible with 1 device, so we test _fit_spec logic
+against synthetic mesh objects."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_smoke_config
+from repro.distributed import sharding as sh
+from repro.models import model as model_lib
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .axis_names and .shape are used by the
+    spec-building code paths under test."""
+
+    def __init__(self, shape_dict):
+        self.axis_names = tuple(shape_dict)
+        self.shape = dict(shape_dict)
+        self.size = int(np.prod(list(shape_dict.values())))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH4 = FakeMesh({"data": 4, "model": 4})   # for smoke-size configs
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _specs_for(arch, mesh=MESH, fsdp=0):
+    cfg = get_smoke_config(arch)
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, shapes, sh.param_specs(mesh, shapes, fsdp_bytes=fsdp)
+
+
+def test_dense_param_specs():
+    cfg, shapes, specs = _specs_for("llama3.2-1b", mesh=MESH4)
+    st = specs["stages"]["stage0"]
+    assert st["attn"]["wq"] == P(None, None, "model", None)  # leading layer dim
+    assert st["attn"]["wo"] == P(None, "model", None, None)
+    assert st["ffn"]["w_gate"] == P(None, None, "model")
+    assert st["ffn"]["w_down"] == P(None, "model", None)
+    assert all(a is None for a in st["norm1"])  # replicated (stacked norm)
+    assert specs["embed"] == P("model", None)
+
+
+def test_divisibility_fallback():
+    """smoke glm4 has kv=2 heads < 16 -> replicated, not uneven."""
+    cfg, shapes, specs = _specs_for("glm4-9b")
+    wk = specs["stages"]["stage0"]["attn"]["wk"]
+    assert wk == P(None, None, None, None)
+
+
+def test_moe_expert_axis():
+    cfg, shapes, specs = _specs_for("phi3.5-moe-42b-a6.6b")
+    st = specs["stages"]["stage0"]
+    assert st["ffn"]["w1"] == P(None, "model", None, None)[:4] or \
+        st["ffn"]["w1"][1] == "model" or st["ffn"]["w1"][0] is None
+    # 4 experts < 16 in smoke -> replicated; check full config instead
+    from repro.configs.base import get_config
+    full = get_config("phi3.5-moe-42b-a6.6b")
+    fsh = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), full))
+    fspecs = sh.param_specs(MESH, fsh, fsdp_bytes=0)
+    w1 = fspecs["stages"]["stage0"]["ffn"]["w1"]
+    assert w1[1] == "model"  # (layers, E, d, f): expert axis sharded
+
+
+def test_fsdp_threshold():
+    from repro.configs.base import get_config
+    full = get_config("llama3.2-1b")
+    fsh = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), full))
+    no_fsdp = sh.param_specs(MESH, fsh, fsdp_bytes=0)
+    fsdp = sh.param_specs(MESH, fsh, fsdp_bytes=32 << 20)
+    wq0 = no_fsdp["stages"]["stage0"]["attn"]["wq"]
+    wq1 = fsdp["stages"]["stage0"]["attn"]["wq"]
+    # big tensor gains a data-axis dim under FSDP
+    flat0 = [a for a in wq0 if a is not None]
+    flat1 = [a for a in jax.tree.leaves(wq1) if a is not None]
+    assert len(flat1) >= len(flat0)
+
+
+def test_multi_pod_fsdp_uses_dp_tuple():
+    from repro.configs.base import get_config
+    full = get_config("deepseek-v3-671b")
+    fsh = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), full))
+    specs = sh.param_specs(MESH3, fsh)
+    w1 = specs["stages"]["stage1"]["ffn"]["w1"]
+    # (layers, E=256, d=7168, f=2048): E -> model; one dim -> (pod, data)
+    assert w1[1] == "model"
+    assert ("pod", "data") in tuple(w1) or "data" in tuple(w1)
+
+
+def test_cache_specs_decode_batch_sharded():
+    cfg = get_smoke_config("mistral-nemo-12b")
+    cache_shape = jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, 128, 2048))
+    specs = sh.cache_specs(MESH, cache_shape, batch=128)
+    k = specs["stage0"]["k"]       # (layers, B, S, Hkv, Dh)
+    assert k[1] == "data"
+    assert k[2] == "model"         # sequence-parallel decode
+
+
+def test_cache_specs_batch1_seq_sharded():
+    cfg = get_smoke_config("mistral-nemo-12b")
+    cache_shape = jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, 1, 512 * 16 * 16))
+    specs = sh.cache_specs(MESH, cache_shape, batch=1)
+    k = specs["stage0"]["k"]
+    assert k[1] is None            # batch=1 replicated
+    assert k[2] is not None        # sequence sharded
+
+
+def test_batch_specs():
+    sds = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
+    specs = sh.batch_specs(MESH, sds)
+    assert specs["tokens"][0] is not None
+    odd = {"tokens": jax.ShapeDtypeStruct((3, 128), jnp.int32)}
+    specs = sh.batch_specs(MESH, odd)
+    assert specs["tokens"] == P()

@@ -1,0 +1,88 @@
+"""Subcarrier allocation (P3): Hungarian optimality, fast path, C3."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel as channel_lib
+from repro.core import subcarrier as sc_lib
+
+
+def _brute_force_assignment(cost):
+    n, m = cost.shape
+    best = np.inf
+    best_cols = None
+    for cols in itertools.permutations(range(m), n):
+        v = cost[np.arange(n), list(cols)].sum()
+        if v < best:
+            best = v
+            best_cols = cols
+    return best, best_cols
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_hungarian_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    n, m = rng.integers(2, 6), rng.integers(6, 9)
+    cost = rng.uniform(0, 10, size=(n, m))
+    rows, cols = sc_lib.linear_sum_assignment(cost)
+    got = cost[rows, cols].sum()
+    want, _ = _brute_force_assignment(cost)
+    assert got == pytest.approx(want, rel=1e-12)
+    assert len(set(cols.tolist())) == n  # exclusivity
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5), extra=st.integers(0, 4))
+def test_property_hungarian_optimal(seed, n, extra):
+    rng = np.random.default_rng(seed)
+    m = n + extra
+    cost = rng.uniform(0, 100, size=(n, m))
+    rows, cols = sc_lib.linear_sum_assignment(cost)
+    got = cost[rows, cols].sum()
+    want, _ = _brute_force_assignment(cost)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_allocate_respects_c3_and_active_links():
+    cfg = channel_lib.ChannelConfig(num_experts=4, num_subcarriers=16)
+    rng = np.random.default_rng(0)
+    gains = channel_lib.sample_channel_gains(cfg, rng)
+    rates = channel_lib.subcarrier_rates(cfg, gains)
+    s = np.zeros((4, 4))
+    s[0, 1] = 8192.0
+    s[2, 3] = 4096.0
+    s[1, 1] = 8192.0  # diagonal: must be ignored
+    beta = sc_lib.allocate_subcarriers(s, rates, cfg.tx_power_w)
+    channel_lib.validate_beta(beta)
+    assert beta[0, 1].sum() == 1
+    assert beta[2, 3].sum() == 1
+    assert beta.sum() == 2
+
+
+def test_fast_path_matches_hungarian_when_distinct():
+    cfg = channel_lib.ChannelConfig(num_experts=3, num_subcarriers=64)
+    rng = np.random.default_rng(1)
+    gains = channel_lib.sample_channel_gains(cfg, rng)
+    rates = channel_lib.subcarrier_rates(cfg, gains)
+    s = np.full((3, 3), 8192.0)
+    np.fill_diagonal(s, 0.0)
+    links = np.argwhere(~np.eye(3, dtype=bool) & (s > 0))
+    fast = sc_lib.max_rate_assignment(rates, links)
+    if fast is None:
+        pytest.skip("collision in this draw")
+    b_auto = sc_lib.allocate_subcarriers(s, rates, cfg.tx_power_w, method="auto")
+    b_hung = sc_lib.allocate_subcarriers(s, rates, cfg.tx_power_w, method="hungarian")
+    e_auto = sc_lib.assignment_energy(s, rates, b_auto, cfg.tx_power_w)
+    e_hung = sc_lib.assignment_energy(s, rates, b_hung, cfg.tx_power_w)
+    assert e_auto == pytest.approx(e_hung, rel=1e-9)
+
+
+def test_too_many_links_raises():
+    rates = np.ones((4, 4, 3))
+    s = np.full((4, 4), 1.0)
+    np.fill_diagonal(s, 0.0)
+    with pytest.raises(ValueError):
+        sc_lib.allocate_subcarriers(s, rates, 1e-2)
