@@ -21,9 +21,10 @@ import numpy as np
 
 from repro.core import channel as channel_lib
 from repro.core import energy as energy_lib
-from repro.core import jesa as jesa_lib
 from repro.core import protocol as proto
+from repro.core.gating import QoSSchedule
 from repro.data.tasks import ExpertPool
+from repro.schedulers import ScheduleContext, get_policy
 
 IMP_DECAY = 0.85
 
@@ -50,7 +51,7 @@ def schedule_query(
     domain: int,
     num_layers: int,
     n_tokens: int,
-    scheme: str,                 # "topk" | "jesa" | "homogeneous" | "lb"
+    scheme: str,                 # any repro.schedulers registry name
     qos_z: float = 1.0,
     gamma0: float = 0.7,
     top_k: int = 2,
@@ -71,6 +72,12 @@ def schedule_query(
     # source node: the expert holding the query (paper: one query/node).
     src = int(rng.integers(0, k))
 
+    # Registry-constructed policy + per-layer ScheduleContext replace the
+    # old per-scheme dispatch; scheme-specific knobs ride in via the
+    # QoSSchedule / ctx fields.
+    policy = get_policy(scheme)
+    sched = QoSSchedule(z=qos_z, gamma0=gamma0, homogeneous_z=homogeneous_z)
+
     per_comm, per_comp, per_q = [], [], []
     hist = np.zeros((num_layers, k))
     nodes_total = 0
@@ -80,25 +87,15 @@ def schedule_query(
         gates = np.zeros((k, n_tokens, k))
         gates[src] = g_src
 
-        if scheme == "topk":
-            res = jesa_lib.topk_allocate(gates, rates, top_k, comp, s0, p0)
-        elif scheme == "jesa":
-            q = qos_z * (gamma0 ** layer)
-            res = jesa_lib.jesa_allocate(gates, rates, q, max_experts,
-                                         comp, s0, p0, rng=rng)
-        elif scheme == "homogeneous":
-            res = jesa_lib.jesa_allocate(gates, rates, homogeneous_z,
-                                         max_experts, comp, s0, p0, rng=rng)
-        elif scheme == "lb":
-            q = qos_z * (gamma0 ** layer)
-            res = jesa_lib.lower_bound_allocate(gates, rates, q, max_experts,
-                                                comp, s0, p0)
-        else:
-            raise ValueError(scheme)
+        ctx = ScheduleContext(
+            gate_scores=gates, rates=rates, layer=layer,
+            qos=qos_z * (gamma0 ** layer), qos_schedule=sched,
+            max_experts=max_experts, top_k=top_k, comp_coeff=comp,
+            s0=s0, p0=p0, rng=rng)
+        res = policy.schedule(ctx)
         nodes_total += res.des_nodes
 
-        acct = proto.account_round(layer, res.alpha, res.beta, rates, comp,
-                                   s0, p0)
+        acct = proto.account_schedule(res, ctx)
         per_comm.append(acct.comm_energy_j)
         per_comp.append(acct.comp_energy_j)
         per_q.append(pool.accuracy(res.alpha[src], g_src, domain))

@@ -77,7 +77,7 @@ def _windowed_query(pool, *, start: int, seed: int,
 
     from repro.core import channel as channel_lib
     from repro.core import energy as energy_lib
-    from repro.core import jesa as jesa_lib
+    from repro.schedulers import ScheduleContext, get_policy
 
     k = pool.num_experts
     rng = np.random.default_rng(seed)
@@ -92,8 +92,10 @@ def _windowed_query(pool, *, start: int, seed: int,
         g = pool.gate_scores(0, N_TOKENS, rng)
         gates = np.zeros((k, N_TOKENS, k))
         gates[0] = g
-        res = jesa_lib.jesa_allocate(gates, rates, z, 2, comp, 8192.0,
-                                     ccfg.tx_power_w, rng=rng)
+        res = get_policy("jesa").schedule(ScheduleContext(
+            gate_scores=gates, rates=rates, layer=layer, qos=z,
+            max_experts=2, comp_coeff=comp, s0=8192.0,
+            p0=ccfg.tx_power_w, rng=rng))
         per_q.append(pool.accuracy(res.alpha[0], g, 0))
     imp = IMP_DECAY ** np.arange(1, LAYERS + 1)
     return float((imp * np.array(per_q)).sum() / imp.sum())

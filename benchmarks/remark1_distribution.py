@@ -23,7 +23,7 @@ import numpy as np
 from benchmarks.common import Timer
 from repro.core import channel as channel_lib
 from repro.core import energy as energy_lib
-from repro.core import jesa as jesa_lib
+from repro.schedulers import ScheduleContext, get_policy
 
 K, M = 8, 64
 N_TOKENS = 12
@@ -44,8 +44,9 @@ def run(verbose: bool = True):
             gates = np.zeros((K, N_TOKENS, K))
             src = int(rng.integers(0, K))
             gates[src] = rng.dirichlet(np.ones(K) * 0.8, size=N_TOKENS)
-            res = jesa_lib.topk_allocate(gates, rates, 2, comp, S0,
-                                         ccfg.tx_power_w)
+            res = get_policy("topk", top_k=2).schedule(ScheduleContext(
+                gate_scores=gates, rates=rates, layer=layer,
+                comp_coeff=comp, s0=S0, p0=ccfg.tx_power_w))
             rates_kk = channel_lib.link_rates(rates, res.beta)
             alpha = res.alpha  # (K, N, K)
 

@@ -9,9 +9,10 @@ JESA (Algorithm 2), and shows the expertise/channel tradeoff knob.
 import numpy as np
 
 from repro.core import (
-    ChannelConfig, QoSSchedule, des_select, jesa_allocate,
-    make_comp_coeffs, sample_channel_gains, subcarrier_rates, topk_allocate,
+    ChannelConfig, QoSSchedule, des_select,
+    make_comp_coeffs, sample_channel_gains, subcarrier_rates,
 )
+from repro.schedulers import ScheduleContext, available_policies, get_policy
 
 K, M, N_TOKENS = 6, 48, 4
 rng = np.random.default_rng(0)
@@ -31,14 +32,17 @@ print(f"\nDES: selected experts {np.nonzero(res.selected)[0].tolist()} "
       f"energy {res.energy:.2e} J, "
       f"B&B explored {res.nodes_explored} nodes (2^K = {2**K})")
 
-# 3. Full-layer JESA (Algorithm 2) vs Top-2 scheduling.
+# 3. Full-layer scheduling via the pluggable policy registry: JESA
+#    (Algorithm 2) vs Top-2, same ScheduleContext for every policy.
 gate_mat = rng.dirichlet(np.ones(K) * 0.7, size=(K, N_TOKENS))
 a = make_comp_coeffs(K)
-jesa = jesa_allocate(gate_mat, rates, qos=0.4, max_experts=2,
-                     comp_coeff=a, s0=8192.0, p0=ccfg.tx_power_w, rng=rng)
-topk = topk_allocate(gate_mat, rates, top_k=2, comp_coeff=a,
-                     s0=8192.0, p0=ccfg.tx_power_w)
-print(f"\nJESA: energy {jesa.energy:.3e} J in {jesa.iterations} BCD iters "
+ctx = ScheduleContext(gate_scores=gate_mat, rates=rates, qos=0.4,
+                      max_experts=2, top_k=2, comp_coeff=a,
+                      s0=8192.0, p0=ccfg.tx_power_w, rng=rng)
+jesa = get_policy("jesa").schedule(ctx)
+topk = get_policy("topk").schedule(ctx)
+print(f"\nregistered policies: {', '.join(available_policies())}")
+print(f"JESA: energy {jesa.energy:.3e} J in {jesa.iterations} BCD iters "
       f"(converged={jesa.converged})")
 print(f"Top-2: energy {topk.energy:.3e} J  "
       f"-> JESA saves {100*(1-jesa.energy/topk.energy):.0f}%")

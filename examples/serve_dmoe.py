@@ -30,6 +30,8 @@ def main():
     print(f"DMoE: {cfg.moe.num_experts} edge nodes x {args.layers} layers, "
           f"{args.tokens} tokens/query\n")
     results = {}
+    # any repro.schedulers registry name works here — drop a new policy
+    # file in src/repro/schedulers/ and add it to this tuple to compare
     for scheme in ("topk", "jesa", "lb"):
         sim = DMoESimulator(cfg, scheme=scheme, seed=args.seed)
         res = sim.serve(tokens)

@@ -1,0 +1,10 @@
+"""Reproduction of 'Optimal Expert Selection for Distributed
+Mixture-of-Experts at the Wireless Edge'.
+
+Key subpackages: `repro.core` (DES/JESA algorithms + physical models),
+`repro.schedulers` (pluggable policy registry), `repro.serving`
+(protocol simulator + engines), `repro.models` / `repro.kernels`
+(JAX MoE transformer + Pallas kernels).
+"""
+
+__version__ = "0.1.0"

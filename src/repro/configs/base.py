@@ -21,8 +21,13 @@ class MoEConfig:
     first_dense_layers: int = 0       # leading layers with dense FFN (dsv3: 3)
     every: int = 1                    # MoE layer period (jamba: 2)
     capacity_factor: float = 1.25
-    # --- paper technique: routing mode + QoS schedule -------------------
-    routing: str = "topk"             # "topk" | "des" | "dense"
+    # --- paper technique: routing policy + QoS schedule -----------------
+    # `routing` is a repro.schedulers registry name ("topk", "des",
+    # "dense", "jesa", ...); `routing_kwargs` are constructor kwargs for
+    # the policy, stored as a tuple of (key, value) pairs so the config
+    # stays hashable.  Resolve with `resolve_routing_policy(cfg)`.
+    routing: str = "topk"
+    routing_kwargs: Tuple[Tuple[str, Any], ...] = ()
     qos_z: float = 1.0
     qos_gamma0: float = 0.7           # gamma^(l) = gamma0^l
     max_experts: int = 0              # D (0 -> top_k)
@@ -128,6 +133,14 @@ class ModelConfig:
         if top:
             cfg = dataclasses.replace(cfg, **top)
         return cfg
+
+
+def resolve_routing_policy(cfg: "ModelConfig"):
+    """Construct the scheduler policy named by `cfg.moe.routing` via the
+    repro.schedulers registry (the single construction path)."""
+    from repro.schedulers import get_policy  # lazy: configs stay light
+
+    return get_policy(cfg.moe.routing, **dict(cfg.moe.routing_kwargs))
 
 
 # ----------------------------------------------------------------------

@@ -34,7 +34,11 @@ from typing import Optional
 
 import numpy as np
 
-_BIG = 1e30  # stand-in for +inf costs (unreachable experts); keeps LP math finite
+# Stand-in for +inf costs (unreachable experts); keeps LP math finite.
+# Small enough that even K * _BIG sums and the fractional-exclusion terms
+# of Eq. (11)-(12) stay far from float64 overflow (and survive a float32
+# downcast in consumers), large enough to dominate any physical energy.
+_BIG = 1e15
 
 
 @dataclasses.dataclass
@@ -49,7 +53,7 @@ class DESResult:
 def _sanitize(e: np.ndarray) -> np.ndarray:
     e = np.asarray(e, dtype=np.float64).copy()
     e[~np.isfinite(e)] = _BIG
-    return e
+    return np.minimum(e, _BIG)
 
 
 def lp_lower_bound(t: np.ndarray, e: np.ndarray, z: float) -> float:
@@ -114,9 +118,16 @@ def des_select(
         else np.asarray(force_include, dtype=bool)
     )
 
+    # All-unreachable edge case: every cost was +inf, so every selection
+    # has (sanitized) energy ~K*_BIG — a garbage bound that used to leak
+    # out of the LP math.  Treat it like Remark-2 infeasibility: Top-D-by-
+    # score fallback, honestly priced at +inf.
+    all_unreachable = not np.isfinite(
+        np.asarray(costs, dtype=np.float64)).any()
+
     # Feasibility (Remark 2): can the best-score D experts cover qos?
     top_d_score = float(np.sort(t)[::-1][:d].sum())
-    if top_d_score < qos or d < int(forced.sum()):
+    if top_d_score < qos or d < int(forced.sum()) or all_unreachable:
         sel = top_d_fallback(t, e, d)
         sel |= forced
         # trim to D keeping highest scores if forced pushed us over
@@ -133,7 +144,8 @@ def des_select(
                     keep[j] = True
                     budget -= 1
             sel = keep
-        return DESResult(sel, float(e[sel].sum()), False, 0, 0)
+        energy = float("inf") if all_unreachable else float(e[sel].sum())
+        return DESResult(sel, energy, False, 0, 0)
 
     # Sort by energy-to-score ratio descending (paper's branch order).
     with np.errstate(divide="ignore"):
@@ -235,6 +247,9 @@ def des_select_brute_force(
     t = np.asarray(scores, dtype=np.float64)
     e = _sanitize(costs)
     k = t.shape[0]
+    if not np.isfinite(np.asarray(costs, dtype=np.float64)).any():
+        sel = top_d_fallback(t, e, max_experts)
+        return DESResult(sel, float("inf"), False, 0, 0)
     best_e, best_sel = np.inf, None
     for bits in range(1 << k):
         sel = np.array([(bits >> b) & 1 for b in range(k)], dtype=bool)

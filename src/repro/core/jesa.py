@@ -1,29 +1,22 @@
-"""Joint Expert and Subcarrier Allocation — Algorithm 2 (paper §VI).
+"""Legacy entry points for Joint Expert and Subcarrier Allocation.
 
-Block-coordinate descent on P2:
+DEPRECATED: the algorithm bodies live in `repro.schedulers` behind the
+unified `SchedulerPolicy` interface — construct policies via
+`repro.schedulers.get_policy("jesa" | "topk" | "homogeneous" | "lb", ...)`
+and call `.schedule(ScheduleContext(...))`.
 
-    alpha-step: with beta fixed, P2 reduces to P1 -> exact DES per
-                (source i, hidden-state n)  (Algorithm 1);
-    beta-step:  with alpha fixed, P2 reduces to P3 -> optimal assignment
-                (subcarrier.allocate_subcarriers).
-
-Prop. 2 guarantees each half-step is feasible + conditionally optimal and
-the objective is monotonically non-increasing; Theorem 1 / Corollary 1 give
-asymptotic global optimality as M grows (the per-link best subcarriers are
-distinct w.h.p., making the beta-step selection-independent).
+These shims adapt the old free-function signatures onto the registry
+(bit-for-bit identical outputs; asserted by tests/test_schedulers.py) and
+will be removed once external callers migrate.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional
 
 import numpy as np
-
-from repro.core import channel as channel_lib
-from repro.core import energy as energy_lib
-from repro.core import des as des_lib
-from repro.core import subcarrier as sc_lib
 
 
 @dataclasses.dataclass
@@ -35,6 +28,45 @@ class JESAResult:
     iterations: int
     converged: bool
     des_nodes: int               # total B&B nodes explored (complexity)
+
+
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.jesa.{old} is deprecated; use "
+        f"repro.schedulers.{new} instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def _make_ctx(gate_scores, rates, qos, max_experts, comp_coeff, s0, p0,
+              rng=None, comp_static=None, top_k: int = 2):
+    from repro.schedulers import ScheduleContext
+
+    return ScheduleContext(
+        gate_scores=np.asarray(gate_scores),
+        rates=np.asarray(rates),
+        qos=float(qos),
+        max_experts=int(max_experts),
+        top_k=top_k,
+        comp_coeff=np.asarray(comp_coeff),
+        comp_static=comp_static,
+        s0=float(s0),
+        p0=float(p0),
+        rng=rng,
+    )
+
+
+def _to_result(rs) -> JESAResult:
+    return JESAResult(
+        alpha=rs.alpha,
+        beta=rs.beta,
+        energy=rs.energy,
+        energy_trace=rs.energy_trace,
+        iterations=rs.iterations,
+        converged=rs.converged,
+        des_nodes=rs.des_nodes,
+    )
 
 
 def jesa_allocate(
@@ -51,76 +83,14 @@ def jesa_allocate(
     beta_method: str = "auto",
     comp_static: Optional[np.ndarray] = None,
 ) -> JESAResult:
-    """Run Algorithm 2 for one layer's scheduling round.
+    """DEPRECATED shim for Algorithm 2 — see `repro.schedulers.JESAPolicy`."""
+    from repro.schedulers import get_policy
 
-    Args:
-      gate_scores: (K, N, K) — gate_scores[i, n, j] = g_j(u_i^(n)).
-        Sources with fewer than N real tokens should carry zero rows.
-      rates: (K, K, M) per-subcarrier rates r_ij^(m).
-      qos: z * gamma^(l) for this layer.
-      max_experts: D.
-      comp_coeff: (K,) a_j in J/byte.
-      s0, p0: hidden-state bytes, per-subcarrier power.
-    """
-    k, n_tok, _ = gate_scores.shape
-    m = rates.shape[-1]
-    rng = rng or np.random.default_rng(0)
-
-    # --- Initialization (Algorithm 2): alpha <- 1, beta <- random assign.
-    alpha = np.ones((k, n_tok, k), dtype=np.int8)
-    cfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
-    beta = channel_lib.random_subcarrier_assignment(cfg, rng)
-
-    energy_trace: List[float] = []
-    total_nodes = 0
-    converged = False
-    it = 0
-
-    for it in range(1, max_iters + 1):
-        # ---- alpha-step: DES per (i, n) under current link rates.
-        rates_kk = channel_lib.link_rates(rates, beta)
-        costs = energy_lib.selection_costs(rates_kk, beta, comp_coeff, s0, p0)
-        new_alpha = np.zeros_like(alpha)
-        for i in range(k):
-            row_costs = costs[i]
-            for n in range(n_tok):
-                g = gate_scores[i, n]
-                if g.sum() <= 0:  # padding token
-                    continue
-                res = des_lib.des_select(g, row_costs, qos, max_experts)
-                total_nodes += res.nodes_explored
-                new_alpha[i, n] = res.selected.astype(np.int8)
-
-        # ---- beta-step: optimal assignment for the new traffic matrix.
-        # alpha[i, n, j] summed over n -> s_ij traffic matrix (K_src, K_dst)
-        s_bytes = s0 * new_alpha.sum(axis=1).astype(np.float64)
-        np.fill_diagonal(s_bytes, 0.0)  # in-situ: no transmission
-        new_beta = sc_lib.allocate_subcarriers(
-            s_bytes, rates, p0, method=beta_method
-        )
-
-        new_rates_kk = channel_lib.link_rates(rates, new_beta)
-        s_full = s0 * new_alpha.sum(axis=1).astype(np.float64)
-        obj = energy_lib.comm_energy(
-            np.where(np.eye(k, dtype=bool), 0.0, s_full), new_rates_kk, new_beta, p0
-        ) + energy_lib.comp_energy(s_full, comp_coeff, comp_static)
-        energy_trace.append(obj)
-
-        if np.array_equal(new_alpha, alpha) and np.array_equal(new_beta, beta):
-            converged = True
-            alpha, beta = new_alpha, new_beta
-            break
-        alpha, beta = new_alpha, new_beta
-
-    return JESAResult(
-        alpha=alpha,
-        beta=beta,
-        energy=energy_trace[-1] if energy_trace else float("inf"),
-        energy_trace=energy_trace,
-        iterations=it,
-        converged=converged,
-        des_nodes=total_nodes,
-    )
+    _warn("jesa_allocate", 'get_policy("jesa")')
+    ctx = _make_ctx(gate_scores, rates, qos, max_experts, comp_coeff, s0,
+                    p0, rng=rng, comp_static=comp_static)
+    policy = get_policy("jesa", max_iters=max_iters, beta_method=beta_method)
+    return _to_result(policy.schedule(ctx))
 
 
 def topk_allocate(
@@ -134,25 +104,14 @@ def topk_allocate(
     beta_method: str = "auto",
     comp_static: Optional[np.ndarray] = None,
 ) -> JESAResult:
-    """Benchmark scheme: Top-k selection + optimal subcarrier allocation."""
-    k, n_tok, _ = gate_scores.shape
-    alpha = np.zeros((k, n_tok, k), dtype=np.int8)
-    for i in range(k):
-        for n in range(n_tok):
-            g = gate_scores[i, n]
-            if g.sum() <= 0:
-                continue
-            sel = np.argsort(-g, kind="stable")[:top_k]
-            alpha[i, n, sel] = 1
-    s_bytes = s0 * alpha.sum(axis=1).astype(np.float64)
-    np.fill_diagonal(s_bytes, 0.0)
-    beta = sc_lib.allocate_subcarriers(s_bytes, rates, p0, method=beta_method)
-    rates_kk = channel_lib.link_rates(rates, beta)
-    s_full = s0 * alpha.sum(axis=1).astype(np.float64)
-    obj = energy_lib.comm_energy(
-        np.where(np.eye(k, dtype=bool), 0.0, s_full), rates_kk, beta, p0
-    ) + energy_lib.comp_energy(s_full, comp_coeff, comp_static)
-    return JESAResult(alpha, beta, obj, [obj], 1, True, 0)
+    """DEPRECATED shim — see `repro.schedulers.TopKPolicy`."""
+    from repro.schedulers import get_policy
+
+    _warn("topk_allocate", 'get_policy("topk")')
+    ctx = _make_ctx(gate_scores, rates, 0.0, top_k, comp_coeff, s0, p0,
+                    comp_static=comp_static, top_k=top_k)
+    policy = get_policy("topk", top_k=top_k, beta_method=beta_method)
+    return _to_result(policy.schedule(ctx))
 
 
 def lower_bound_allocate(
@@ -166,29 +125,10 @@ def lower_bound_allocate(
     *,
     comp_static: Optional[np.ndarray] = None,
 ) -> JESAResult:
-    """LB(gamma0, D) benchmark: DES with the C3 constraint dropped — every
-    link concurrently uses its single best subcarrier (paper §VII-A3)."""
-    k, n_tok, _ = gate_scores.shape
-    m = rates.shape[-1]
-    beta = np.zeros((k, k, m), dtype=np.int8)
-    for i in range(k):
-        for j in range(k):
-            if i != j:
-                beta[i, j, int(np.argmax(rates[i, j]))] = 1
-    rates_kk = channel_lib.link_rates(rates, beta)
-    costs = energy_lib.selection_costs(rates_kk, beta, comp_coeff, s0, p0)
-    alpha = np.zeros((k, n_tok, k), dtype=np.int8)
-    nodes = 0
-    for i in range(k):
-        for n in range(n_tok):
-            g = gate_scores[i, n]
-            if g.sum() <= 0:
-                continue
-            res = des_lib.des_select(g, costs[i], qos, max_experts)
-            nodes += res.nodes_explored
-            alpha[i, n] = res.selected.astype(np.int8)
-    s_full = s0 * alpha.sum(axis=1).astype(np.float64)
-    obj = energy_lib.comm_energy(
-        np.where(np.eye(k, dtype=bool), 0.0, s_full), rates_kk, beta, p0
-    ) + energy_lib.comp_energy(s_full, comp_coeff, comp_static)
-    return JESAResult(alpha, beta, obj, [obj], 1, True, nodes)
+    """DEPRECATED shim — see `repro.schedulers.LowerBoundPolicy`."""
+    from repro.schedulers import get_policy
+
+    _warn("lower_bound_allocate", 'get_policy("lb")')
+    ctx = _make_ctx(gate_scores, rates, qos, max_experts, comp_coeff, s0,
+                    p0, comp_static=comp_static)
+    return _to_result(get_policy("lb").schedule(ctx))

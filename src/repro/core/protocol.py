@@ -24,16 +24,9 @@ import numpy as np
 from repro.core import channel as channel_lib
 from repro.core import energy as energy_lib
 
-
-@dataclasses.dataclass
-class RoundSchedule:
-    """Server decision for one protocol round (one model layer)."""
-
-    layer: int
-    alpha: np.ndarray            # (K, N, K)
-    beta: np.ndarray             # (K, K, M)
-    qos: float
-    scheme: str                  # "jesa" | "topk" | "homogeneous" | "lb"
+# The canonical RoundSchedule now lives with the pluggable policy API;
+# re-exported here for backward compatibility.
+from repro.schedulers.base import RoundSchedule  # noqa: F401
 
 
 @dataclasses.dataclass
@@ -62,6 +55,7 @@ def account_round(
     p0: float,
     *,
     count_backward: bool = True,
+    comp_static: Optional[np.ndarray] = None,
 ) -> RoundAccounting:
     """Energy accounting for a scheduled round.
 
@@ -77,7 +71,7 @@ def account_round(
     comm = energy_lib.comm_energy(off, rates_kk, beta, p0)
     if count_backward:
         comm *= 2.0
-    comp = energy_lib.comp_energy(s_bytes, comp_coeff)
+    comp = energy_lib.comp_energy(s_bytes, comp_coeff, comp_static)
     tokens = int((alpha.sum(axis=-1) > 0).sum())
     sel_mean = float(alpha.sum() / max(tokens, 1))
     return RoundAccounting(
@@ -88,6 +82,14 @@ def account_round(
         tokens=tokens,
         selected_per_token=sel_mean,
     )
+
+
+def account_schedule(rs: "RoundSchedule", ctx, *,
+                     count_backward: bool = True) -> RoundAccounting:
+    """Accounting for a policy decision: `rs` from `policy.schedule(ctx)`."""
+    return account_round(
+        rs.layer, rs.alpha, rs.beta, ctx.rates, ctx.comp_coeff, ctx.s0,
+        ctx.p0, count_backward=count_backward, comp_static=ctx.comp_static)
 
 
 def summarize(rounds: List[RoundAccounting]) -> dict:

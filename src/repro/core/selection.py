@@ -112,30 +112,31 @@ def route(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Unified router: returns (combine_weights, mask), both (..., K).
 
-    routing:
-      "topk" — standard Top-k (centralized-MoE baseline);
-      "des"  — greedy DES with per-expert costs + QoS (paper's technique);
-      "dense"— all experts (debug / upper bound).
+    `routing` is any registered in-graph-capable policy name
+    (repro.schedulers), e.g.:
+      "topk"       — standard Top-k (centralized-MoE baseline);
+      "des"/"des-greedy" — greedy DES with per-expert costs + QoS
+                     (paper's technique);
+      "dense"      — all experts (debug / upper bound).
     combine weights follow Eq. (8): renormalized gate mass over selection.
     """
+    # Lazy import: schedulers.graph imports this module for the mask
+    # primitives.
+    from repro.schedulers import get_policy
+
     gates = jax.nn.softmax(gate_logits.astype(jnp.float32), axis=-1)
-    n_exp = gates.shape[-1]
     # The selection mask is a hard (non-differentiable) decision: sever the
     # gradient BEFORE the sort-based mask math so no transpose rules are
     # needed for argsort/top_k (gate gradients flow via the combine
     # weights below instead).
     gates_ng = jax.lax.stop_gradient(gates)
-    if routing == "topk":
-        mask = topk_mask(gates_ng, top_k)
-    elif routing == "des":
-        if costs is None:
-            costs = jnp.ones((n_exp,), dtype=jnp.float32)
-        d = max_experts if max_experts is not None else top_k
-        mask = greedy_des_mask(gates_ng, costs, qos, d)
-    elif routing == "dense":
-        mask = jnp.ones_like(gates)
-    else:
-        raise ValueError(f"unknown routing {routing!r}")
+    try:
+        policy = get_policy(routing)
+    except KeyError as exc:
+        raise ValueError(f"unknown routing {routing!r}") from exc
+    mask = policy.route_mask(
+        gates_ng, qos=qos, costs=costs, top_k=top_k,
+        max_experts=max_experts if max_experts is not None else top_k)
     mask = jax.lax.stop_gradient(mask)
     combine = mask * gates
     combine = combine / (jnp.sum(combine, axis=-1, keepdims=True) + 1e-9)

@@ -15,6 +15,7 @@ import argparse
 import numpy as np
 
 from repro.configs.base import get_config, get_smoke_config
+from repro.schedulers import available_policies
 from repro.serving import DMoESimulator, Request, ServingEngine
 
 
@@ -30,7 +31,7 @@ def main():
     ap.add_argument("--edge", action="store_true",
                     help="run the DMoE wireless-edge protocol simulator")
     ap.add_argument("--scheme", default="jesa",
-                    choices=["jesa", "topk", "homogeneous", "lb"])
+                    choices=list(available_policies()))
     ap.add_argument("--tokens-per-query", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import get_config, get_smoke_config
-from repro.core import selection as sel_lib
+from repro.configs.base import (get_config, get_smoke_config,
+                                resolve_routing_policy)
 from repro.data import DataConfig, lm_batch
 from repro.launch import steps as steps_lib
 from repro.models import model as model_lib
@@ -42,11 +42,12 @@ def train(arch: str, *, smoke: bool = True, steps: int = 100,
     opt_cfg = AdamWConfig(lr=lr, total_steps=steps,
                           warmup_steps=max(steps // 20, 5))
 
+    # the routing policy supplies its in-graph cost vector (None for
+    # policies that route on gate scores alone)
     expert_costs = None
-    if cfg.moe.num_experts and cfg.moe.routing == "des":
-        expert_costs = sel_lib.expert_comm_costs(
-            cfg.moe.num_experts, max(cfg.moe.num_experts // 4, 1),
-            comp_coeff=jnp.linspace(0.1, 1.0, cfg.moe.num_experts))
+    if cfg.moe.num_experts:
+        expert_costs = resolve_routing_policy(cfg).in_graph_costs(
+            cfg.moe.num_experts)
 
     params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
     opt_state = init_opt_state(params, opt_cfg)
@@ -90,7 +91,8 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--routing", default=None, choices=[None, "topk", "des"])
+    ap.add_argument("--routing", default=None,
+                    choices=[None, "topk", "des", "des-greedy", "dense"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")

@@ -1,0 +1,43 @@
+"""Pluggable scheduler policies for the DMoE wireless-edge protocol.
+
+    from repro.schedulers import get_policy, ScheduleContext
+
+    policy = get_policy("jesa")                 # or "topk", "lb", ...
+    rs = policy.schedule(ScheduleContext(gate_scores=g, rates=r, qos=0.4))
+    rs.alpha, rs.beta, rs.energy
+
+Registered policies (see base.py for the protocol, README for a guide):
+  jesa         — Algorithm 2 block-coordinate descent (exact DES alpha-step)
+  homogeneous  — JESA with a layer-independent QoS threshold H(z, D)
+  topk         — Top-k selection + optimal subcarrier allocation
+  lb           — LB(gamma0, D): DES with C3 dropped (per-link best subcarrier)
+  des-greedy   — paper's P1(b) greedy relaxation; jit-able (alias: "des")
+  dense        — all experts (debug upper bound); jit-able
+"""
+
+from repro.schedulers.base import (
+    RoundSchedule,
+    ScheduleContext,
+    SchedulerPolicy,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+
+# Importing the policy modules populates the registry.
+from repro.schedulers import host as _host  # noqa: F401
+from repro.schedulers import graph as _graph  # noqa: F401
+from repro.schedulers.host import (
+    HomogeneousPolicy,
+    JESAPolicy,
+    LowerBoundPolicy,
+    TopKPolicy,
+)
+from repro.schedulers.graph import DensePolicy, GreedyDESPolicy
+
+__all__ = [
+    "RoundSchedule", "ScheduleContext", "SchedulerPolicy",
+    "available_policies", "get_policy", "register_policy",
+    "JESAPolicy", "HomogeneousPolicy", "TopKPolicy", "LowerBoundPolicy",
+    "GreedyDESPolicy", "DensePolicy",
+]

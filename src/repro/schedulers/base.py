@@ -1,0 +1,206 @@
+"""Unified scheduler API: one pluggable policy interface for DES / JESA /
+baselines across the host-exact and in-graph paths.
+
+The paper contributes a *family* of schedulers — exact DES (Alg. 1), JESA
+block-coordinate descent (Alg. 2), and the Top-k / homogeneous /
+lower-bound benchmarks — and more are coming (channel-aware gating,
+similarity-aware selection).  This module gives them a single extension
+point:
+
+  * `ScheduleContext` — everything a policy may look at for one protocol
+    round: gate scores, per-subcarrier rates (CSI), the resolved QoS
+    threshold plus the full `QoSSchedule`, energy coefficients, and the
+    expert/subcarrier budgets.
+  * `RoundSchedule`  — the canonical decision record every policy returns:
+    (alpha, beta) plus objective/trace/complexity metadata.
+  * `SchedulerPolicy` — the protocol.  `schedule(ctx)` is the host-exact
+    numpy path; `route_mask(gates, ...)` is the optional jit-able in-graph
+    path (vectorized over any leading token axes).
+  * a registry: `@register_policy("jesa")`, `get_policy(name, **kw)`,
+    `available_policies()`.
+
+Adding a new policy is one file: subclass `SchedulerPolicy`, decorate with
+`@register_policy("my-policy")`, and the simulator (`serving/dmoe_sim.py`),
+the engine (`serving/engine.py`), and the benchmark harness
+(`benchmarks/common.py`) can all run it by name with zero changes.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+import numpy as np
+
+from repro.core.gating import QoSSchedule
+
+
+# ----------------------------------------------------------------------
+# Shared context + canonical return type
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScheduleContext:
+    """Inputs for one protocol round (one model layer).
+
+    Shapes follow the paper: K source nodes, N tokens per node, E experts
+    (E == K for the vertically-partitioned DMoE deployment), M subcarriers.
+    Padding tokens carry all-zero gate rows and are never scheduled.
+    """
+
+    gate_scores: np.ndarray                  # (K, N, E) g_j(u_i^(n))
+    rates: np.ndarray                        # (K, K, M) per-subcarrier r_ij^(m)
+    layer: int = 1                           # 1-based protocol round index
+    qos: float = 0.0                         # resolved z * gamma^(l)
+    qos_schedule: Optional[QoSSchedule] = None
+    max_experts: int = 2                     # D (C2 budget)
+    top_k: int = 2                           # k for Top-k style policies
+    comp_coeff: Optional[np.ndarray] = None  # (K,) a_j in J/byte
+    comp_static: Optional[np.ndarray] = None  # (K,) b_j in J
+    s0: float = 8192.0                       # hidden-state bytes
+    p0: float = 1e-2                         # per-subcarrier tx power P0
+    rng: Optional[np.random.Generator] = None
+
+    def __post_init__(self):
+        if self.comp_coeff is None:
+            from repro.core import energy as energy_lib
+            self.comp_coeff = energy_lib.make_comp_coeffs(self.num_experts)
+        if self.rng is None:
+            self.rng = np.random.default_rng(0)
+
+    @property
+    def num_sources(self) -> int:
+        return self.gate_scores.shape[0]
+
+    @property
+    def num_tokens(self) -> int:
+        return self.gate_scores.shape[1]
+
+    @property
+    def num_experts(self) -> int:
+        return self.gate_scores.shape[-1]
+
+    @property
+    def num_subcarriers(self) -> int:
+        return self.rates.shape[-1]
+
+    def active_tokens(self) -> np.ndarray:
+        """(K, N) bool — tokens with nonzero gate mass (non-padding)."""
+        return self.gate_scores.sum(axis=-1) > 0
+
+
+@dataclasses.dataclass
+class RoundSchedule:
+    """Canonical server decision for one protocol round.
+
+    `beta` is None only for pure in-graph routing records (no OFDMA
+    allocation); every host policy fills it.
+    """
+
+    layer: int
+    alpha: np.ndarray                    # (K, N, E) selection indicators
+    beta: Optional[np.ndarray]           # (K, K, M) subcarrier assignment
+    qos: float                           # the threshold the policy enforced
+    policy: str                          # registry name that produced this
+    energy: float = float("inf")         # final P2 objective
+    energy_trace: List[float] = dataclasses.field(default_factory=list)
+    iterations: int = 1
+    converged: bool = True
+    des_nodes: int = 0                   # B&B nodes explored (complexity)
+
+    @property
+    def scheme(self) -> str:
+        """Back-compat alias for the pre-registry field name."""
+        return self.policy
+
+    def selected_per_token(self) -> float:
+        tokens = int((self.alpha.sum(axis=-1) > 0).sum())
+        return float(self.alpha.sum() / max(tokens, 1))
+
+
+# ----------------------------------------------------------------------
+# Policy protocol
+# ----------------------------------------------------------------------
+
+class SchedulerPolicy(abc.ABC):
+    """One scheduling policy, usable by name across the whole stack.
+
+    Two surfaces:
+      * `schedule(ctx)` — REQUIRED.  Host-exact numpy path; returns the
+        canonical `RoundSchedule` (used by the DMoE simulator and the
+        benchmark harness).
+      * `route_mask(gates, ...)` — OPTIONAL.  Pure-jax token-level mask for
+        the in-graph path (`models/moe.py`, `serving/engine.py`); must be
+        traceable and broadcast over leading axes.  Policies whose exact
+        algorithm is data-dependent host control flow (JESA's B&B) leave
+        it unimplemented.
+    """
+
+    name: str = "?"
+    #: False for debug policies (e.g. "dense") that deliberately ignore
+    #: the C2 expert budget; feasibility checks key off this.
+    enforces_budget: bool = True
+
+    @abc.abstractmethod
+    def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
+        """Solve one round: (alpha, beta) + objective for `ctx`."""
+
+    def route_mask(self, gates, *, qos=0.0, costs=None, top_k: int = 2,
+                   max_experts: int = 0):
+        """Jit-able (..., E) -> (..., E) {0,1} selection mask."""
+        raise NotImplementedError(
+            f"policy {self.name!r} has no in-graph path; use its host "
+            f"schedule() or an in-graph-capable policy (e.g. 'des-greedy')")
+
+    def in_graph_costs(self, num_experts: int):
+        """Optional per-expert cost vector for the in-graph path (None if
+        the policy routes on gate scores alone)."""
+        return None
+
+    def effective_qos(self, ctx: ScheduleContext) -> float:
+        """The C1 threshold this policy enforces for `ctx` (policies with
+        their own schedule — e.g. homogeneous — override)."""
+        return ctx.qos
+
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[SchedulerPolicy]] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_policy(name: str, *, aliases: Tuple[str, ...] = ()):
+    """Class decorator: `@register_policy("jesa")`."""
+
+    def deco(cls: Type[SchedulerPolicy]) -> Type[SchedulerPolicy]:
+        if name in _REGISTRY or name in _ALIASES:
+            raise ValueError(f"duplicate scheduler policy {name!r}")
+        for a in aliases:
+            if a in _REGISTRY or a in _ALIASES:
+                raise ValueError(
+                    f"alias {a!r} for policy {name!r} is already taken")
+        cls.name = name
+        _REGISTRY[name] = cls
+        for a in aliases:
+            _ALIASES[a] = name
+        return cls
+
+    return deco
+
+
+def get_policy(name: str, **kwargs: Any) -> SchedulerPolicy:
+    """Construct a registered policy by name (the single construction
+    path used by the simulator, the engine, and the benchmarks)."""
+    key = _ALIASES.get(name, name)
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown scheduler policy {name!r}; "
+            f"available: {sorted(_REGISTRY)} (+aliases {sorted(_ALIASES)})")
+    return _REGISTRY[key](**kwargs)
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

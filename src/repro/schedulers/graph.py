@@ -1,0 +1,119 @@
+"""In-graph-capable scheduler policies (jit-able `route_mask` path).
+
+`des-greedy` is the paper's own P1(b) relaxation (§V-C) — the TPU-native
+DES router in `repro.core.selection` — lifted behind the unified
+`SchedulerPolicy` interface.  Its host `schedule()` runs the same
+vectorized mask over all (source, token) pairs (vmapped over tokens via
+broadcasting) and then assigns subcarriers optimally, so the one policy
+serves both the wireless simulator and the jit'd serving engine.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.core import energy as energy_lib
+from repro.schedulers.base import (
+    RoundSchedule,
+    ScheduleContext,
+    SchedulerPolicy,
+    register_policy,
+)
+from repro.schedulers.host import (
+    _allocate_beta,
+    _round_energy,
+    best_subcarrier_beta,
+)
+
+
+@register_policy("des-greedy", aliases=("des",))
+class GreedyDESPolicy(SchedulerPolicy):
+    """Greedy DES (LP-relaxation rounding) — exact whenever the LP is
+    integral at the critical expert, always C1/C2-feasible (Remark-2
+    Top-D fallback), and fully traceable for in-graph routing."""
+
+    def __init__(self, *, max_experts: Optional[int] = None,
+                 beta_method: str = "auto"):
+        self.max_experts = max_experts  # None -> call-site / ctx value
+        self.beta_method = beta_method
+
+    def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
+        import jax.numpy as jnp
+        from repro.core import selection as sel_lib
+
+        d = self.max_experts if self.max_experts is not None else ctx.max_experts
+        # Cost estimate under the per-link best subcarrier (the beta-step
+        # then reallocates optimally for the realized traffic).
+        beta0 = best_subcarrier_beta(ctx.rates)
+        rates_kk = channel_lib.link_rates(ctx.rates, beta0)
+        costs = energy_lib.selection_costs(
+            rates_kk, beta0, ctx.comp_coeff, ctx.s0, ctx.p0)
+
+        # One vectorized mask over all (K, N) tokens: costs broadcast per
+        # source row against the (K, N, E) gate tensor.
+        mask = sel_lib.greedy_des_mask(
+            jnp.asarray(ctx.gate_scores, dtype=jnp.float32),
+            jnp.asarray(costs, dtype=jnp.float32)[:, None, :],
+            ctx.qos, d)
+        alpha = np.asarray(mask, dtype=np.int8)
+        alpha *= ctx.active_tokens()[..., None].astype(np.int8)
+
+        beta = _allocate_beta(alpha, ctx, self.beta_method)
+        obj = _round_energy(alpha, beta, ctx)
+        return RoundSchedule(
+            layer=ctx.layer, alpha=alpha, beta=beta, qos=ctx.qos,
+            policy=self.name, energy=obj, energy_trace=[obj],
+            iterations=1, converged=True, des_nodes=0)
+
+    def route_mask(self, gates, *, qos=0.0, costs=None, top_k: int = 2,
+                   max_experts: int = 0):
+        import jax.numpy as jnp
+        from repro.core import selection as sel_lib
+
+        n_exp = gates.shape[-1]
+        if costs is None:
+            costs = jnp.ones((n_exp,), dtype=jnp.float32)
+        d = (self.max_experts if self.max_experts is not None
+             else (max_experts or top_k))
+        return sel_lib.greedy_des_mask(gates, costs, qos, d)
+
+    def in_graph_costs(self, num_experts: int):
+        import jax.numpy as jnp
+        from repro.core import selection as sel_lib
+
+        return sel_lib.expert_comm_costs(
+            num_experts, max(num_experts // 4, 1),
+            comp_coeff=jnp.linspace(0.1, 1.0, num_experts))
+
+
+@register_policy("dense")
+class DensePolicy(SchedulerPolicy):
+    """All experts, always — debug / quality upper bound.  Deliberately
+    ignores the C2 budget (`enforces_budget = False`)."""
+
+    enforces_budget = False
+
+    def __init__(self, *, beta_method: str = "auto"):
+        self.beta_method = beta_method
+
+    def effective_qos(self, ctx: ScheduleContext) -> float:
+        return 0.0
+
+    def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
+        alpha = ctx.active_tokens()[..., None].astype(np.int8) * np.ones(
+            ctx.gate_scores.shape, dtype=np.int8)
+        beta = _allocate_beta(alpha, ctx, self.beta_method)
+        obj = _round_energy(alpha, beta, ctx)
+        return RoundSchedule(
+            layer=ctx.layer, alpha=alpha, beta=beta, qos=0.0,
+            policy=self.name, energy=obj, energy_trace=[obj],
+            iterations=1, converged=True, des_nodes=0)
+
+    def route_mask(self, gates, *, qos=0.0, costs=None, top_k: int = 2,
+                   max_experts: int = 0):
+        import jax.numpy as jnp
+
+        return jnp.ones_like(gates)

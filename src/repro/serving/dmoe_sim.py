@@ -30,12 +30,13 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import channel as channel_lib
 from repro.core import energy as energy_lib
-from repro.core import jesa as jesa_lib
 from repro.core import protocol as proto
 from repro.core.gating import QoSSchedule
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import model as model_lib
+from repro.schedulers import RoundSchedule, ScheduleContext, SchedulerPolicy
+from repro.schedulers import get_policy
 
 
 @dataclasses.dataclass
@@ -54,6 +55,7 @@ class DMoESimulator:
     """
 
     def __init__(self, cfg: ModelConfig, *, scheme: str = "jesa",
+                 policy: Optional[SchedulerPolicy] = None,
                  qos: Optional[QoSSchedule] = None,
                  channel_cfg: Optional[channel_lib.ChannelConfig] = None,
                  seed: int = 0, top_k: Optional[int] = None,
@@ -62,7 +64,10 @@ class DMoESimulator:
         assert not cfg.mla, "simulator uses the plain GQA MoE block"
         self.cfg = cfg
         self.k = cfg.moe.num_experts
-        self.scheme = scheme
+        # `scheme` is any registry name; a pre-constructed policy instance
+        # (with custom kwargs) may be passed directly instead.
+        self.policy = policy if policy is not None else get_policy(scheme)
+        self.scheme = self.policy.name
         self.qos = qos or QoSSchedule(z=cfg.moe.qos_z,
                                       gamma0=cfg.moe.qos_gamma0)
         self.channel_cfg = channel_cfg or channel_lib.ChannelConfig(
@@ -81,29 +86,22 @@ class DMoESimulator:
         return jax.tree.map(lambda a: a[layer], stack)
 
     def _schedule(self, gates: np.ndarray, rates: np.ndarray, layer: int,
-                  ) -> Tuple[np.ndarray, np.ndarray, int]:
-        """gates: (K, N, E=K). Returns (alpha, beta, des_nodes)."""
-        q = self.qos.qos(layer + 1)
-        d = self.cfg.moe.max_experts or self.cfg.moe.top_k
-        if self.scheme == "topk":
-            res = jesa_lib.topk_allocate(
-                gates, rates, self.top_k, self.comp_coeff, self.s0,
-                self.channel_cfg.tx_power_w)
-        elif self.scheme == "jesa":
-            res = jesa_lib.jesa_allocate(
-                gates, rates, q, d, self.comp_coeff, self.s0,
-                self.channel_cfg.tx_power_w, rng=self.rng)
-        elif self.scheme == "homogeneous":
-            res = jesa_lib.jesa_allocate(
-                gates, rates, self.qos.homogeneous_z, d, self.comp_coeff,
-                self.s0, self.channel_cfg.tx_power_w, rng=self.rng)
-        elif self.scheme == "lb":
-            res = jesa_lib.lower_bound_allocate(
-                gates, rates, q, d, self.comp_coeff, self.s0,
-                self.channel_cfg.tx_power_w)
-        else:
-            raise ValueError(self.scheme)
-        return res.alpha, res.beta, res.des_nodes
+                  ) -> RoundSchedule:
+        """gates: (K, N, E=K). One policy call per protocol round."""
+        ctx = ScheduleContext(
+            gate_scores=gates,
+            rates=rates,
+            layer=layer + 1,
+            qos=self.qos.qos(layer + 1),
+            qos_schedule=self.qos,
+            max_experts=self.cfg.moe.max_experts or self.cfg.moe.top_k,
+            top_k=self.top_k,
+            comp_coeff=self.comp_coeff,
+            s0=self.s0,
+            p0=self.channel_cfg.tx_power_w,
+            rng=self.rng,
+        )
+        return self.policy.schedule(ctx)
 
     # ------------------------------------------------------------------
     def serve(self, tokens: np.ndarray) -> SimResult:
@@ -134,7 +132,8 @@ class DMoESimulator:
                                dtype=np.float64)          # (K, N, E)
 
             # -- step 3: joint expert & subcarrier allocation ----------
-            alpha, beta, _ = self._schedule(gates, rates, layer)
+            rs = self._schedule(gates, rates, layer)
+            alpha, beta = rs.alpha, rs.beta
             hist[layer] = alpha.sum(axis=(0, 1)) / max(alpha.sum(), 1)
 
             # -- steps 4-5: forward tx + FFN + backward tx + aggregate -

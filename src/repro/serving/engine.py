@@ -16,8 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core import selection as sel_lib
+from repro.configs.base import ModelConfig, resolve_routing_policy
 from repro.models import model as model_lib
 
 
@@ -46,16 +45,23 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 256, seed: int = 0,
                  use_des_routing: Optional[bool] = None):
+        # Routing policy comes from the registry: cfg.moe.routing names
+        # it; `use_des_routing=True` forces the paper's greedy DES policy
+        # by overriding the routing name the jitted model resolves.  The
+        # policy supplies its own in-graph cost vector (None for policies
+        # that route on gate scores alone).
+        if cfg.moe.num_experts and use_des_routing:
+            cfg = cfg.with_overrides(moe_routing="des-greedy")
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+        self.policy = None
         self.expert_costs = None
-        if cfg.moe.num_experts and (use_des_routing
-                                    or cfg.moe.routing == "des"):
-            self.expert_costs = sel_lib.expert_comm_costs(
-                cfg.moe.num_experts, max(cfg.moe.num_experts // 4, 1),
-                comp_coeff=jnp.linspace(0.1, 1.0, cfg.moe.num_experts))
+        if cfg.moe.num_experts:
+            self.policy = resolve_routing_policy(cfg)
+            self.expert_costs = self.policy.in_graph_costs(
+                cfg.moe.num_experts)
 
         self._prefill = jax.jit(
             lambda p, b, c: model_lib.prefill(

@@ -1,0 +1,83 @@
+"""`hypothesis` compatibility layer for the test suite.
+
+When hypothesis is installed (see requirements-dev.txt) the real library
+is used unchanged.  When it is missing, a tiny deterministic fallback
+sampler stands in so the property suites still *run* (with a bounded
+number of seeded random examples) instead of failing at collection.
+
+Only the strategy surface this repo uses is implemented:
+`st.integers`, `st.floats`, `st.sampled_from`, `st.booleans`.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    # Cap fallback example counts: the fallback is a smoke net, not a
+    # shrinking search, and CI time should stay bounded without the real
+    # library's deduplication.
+    _MAX_FALLBACK_EXAMPLES = 15
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples=_MAX_FALLBACK_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategy_kw):
+        def deco(fn):
+            # No functools.wraps: pytest must see a ZERO-ARG function, or
+            # it would treat the sampled parameters as missing fixtures
+            # (wraps copies __wrapped__, whose signature pytest follows).
+            def wrapper():
+                n = min(
+                    getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples",
+                                    _MAX_FALLBACK_EXAMPLES)),
+                    _MAX_FALLBACK_EXAMPLES)
+                rng = _np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategy_kw.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

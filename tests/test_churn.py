@@ -3,7 +3,7 @@ parser properties."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.serving.churn import (ChurnConfig, availability_trace,
                                  masked_des_select, schedule_with_churn)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import des as des_lib
 
@@ -103,3 +103,31 @@ def test_property_lp_bound_is_lower_bound(k, seed):
     brute = des_lib.des_select_brute_force(t, e, qos, k)
     if brute.feasible:
         assert bound <= brute.energy + 1e-9
+
+
+def test_all_unreachable_costs_falls_back_to_top_d():
+    """Regression: all-inf costs must hit the Remark-2 Top-D fallback with
+    an honest +inf energy, not a garbage _BIG-sum bound."""
+    t = np.array([0.4, 0.3, 0.2, 0.1])
+    e = np.full(4, np.inf)
+    res = des_lib.des_select(t, e, 0.5, 2)
+    assert not res.feasible
+    assert res.selected.sum() == 2
+    assert set(np.nonzero(res.selected)[0]) == {0, 1}  # Top-D by score
+    assert res.energy == np.inf
+
+    brute = des_lib.des_select_brute_force(t, e, 0.5, 2)
+    assert not brute.feasible
+    np.testing.assert_array_equal(brute.selected, res.selected)
+    assert brute.energy == np.inf
+
+
+def test_partial_unreachable_costs_stay_clamped():
+    """A mix of finite and +inf costs keeps the LP math finite: selections
+    avoid the unreachable expert and report finite energy."""
+    t = np.array([0.5, 0.3, 0.2])
+    e = np.array([np.inf, 0.2, 0.1])
+    res = des_lib.des_select(t, e, 0.45, 2)
+    assert res.feasible
+    assert not res.selected[0]
+    assert np.isfinite(res.energy)

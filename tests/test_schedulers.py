@@ -1,0 +1,227 @@
+"""Unified scheduler API: registry behaviour, per-policy feasibility
+invariants (C1/C2/C3) on shared random instances, and bit-for-bit parity
+between registry-constructed policies and the legacy free functions."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import channel as channel_lib
+from repro.core import energy as energy_lib
+from repro.core import jesa as jesa_lib
+from repro.core.gating import QoSSchedule
+from repro.schedulers import (
+    RoundSchedule,
+    ScheduleContext,
+    SchedulerPolicy,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+
+QOS = 0.3
+D = 2
+FEASIBILITY_POLICIES = ("jesa", "topk", "homogeneous", "lb", "des-greedy")
+
+
+def _instance(seed, k=5, m=40, n_tok=3):
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
+    rng = np.random.default_rng(seed)
+    gains = channel_lib.sample_channel_gains(ccfg, rng)
+    rates = channel_lib.subcarrier_rates(ccfg, gains)
+    g = rng.dirichlet(np.ones(k), size=(k, n_tok))
+    g[0, -1] = 0.0  # one padding token: must never be scheduled
+    return ccfg, rates, g
+
+
+def _ctx(ccfg, rates, g, seed):
+    return ScheduleContext(
+        gate_scores=g,
+        rates=rates,
+        layer=1,
+        qos=QOS,
+        qos_schedule=QoSSchedule(z=1.0, gamma0=0.7, homogeneous_z=QOS),
+        max_experts=D,
+        top_k=D,
+        comp_coeff=energy_lib.make_comp_coeffs(g.shape[0]),
+        s0=8192.0,
+        p0=ccfg.tx_power_w,
+        rng=np.random.default_rng(seed),
+    )
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+def test_registry_lists_core_policies():
+    avail = available_policies()
+    for name in FEASIBILITY_POLICIES + ("dense",):
+        assert name in avail
+    # "des" aliases the greedy in-graph policy
+    assert get_policy("des").name == "des-greedy"
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(KeyError, match="unknown scheduler policy"):
+        get_policy("no-such-policy")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        @register_policy("jesa")
+        class Dup(SchedulerPolicy):  # pragma: no cover
+            def schedule(self, ctx):
+                raise NotImplementedError
+
+
+def test_custom_policy_plugs_into_everything():
+    """The advertised extension point: a one-class policy drop-in is
+    immediately constructible by name."""
+    name = "test-only-random"
+    try:
+        @register_policy(name)
+        class RandomD(SchedulerPolicy):
+            def schedule(self, ctx):
+                k, n, e = ctx.gate_scores.shape
+                alpha = np.zeros((k, n, e), dtype=np.int8)
+                for i in range(k):
+                    for t in range(n):
+                        if ctx.gate_scores[i, t].sum() <= 0:
+                            continue
+                        alpha[i, t, ctx.rng.choice(e, D, replace=False)] = 1
+                return RoundSchedule(layer=ctx.layer, alpha=alpha,
+                                     beta=None, qos=0.0, policy=self.name)
+
+        ccfg, rates, g = _instance(0)
+        rs = get_policy(name).schedule(_ctx(ccfg, rates, g, 0))
+        assert isinstance(rs, RoundSchedule)
+        assert rs.policy == name
+    finally:
+        from repro.schedulers import base as _base
+        _base._REGISTRY.pop(name, None)
+
+
+# ----------------------------------------------------------------------
+# feasibility invariants (shared instances across every policy)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("name", FEASIBILITY_POLICIES)
+def test_policy_returns_feasible_round_schedule(name, seed):
+    ccfg, rates, g = _instance(seed)
+    ctx = _ctx(ccfg, rates, g, seed)
+    policy = get_policy(name)
+    rs = policy.schedule(ctx)
+
+    assert isinstance(rs, RoundSchedule)
+    assert rs.policy == name
+    assert rs.alpha.shape == g.shape
+    k = g.shape[0]
+
+    # C2: at most D experts per scheduled token.
+    per_token = rs.alpha.sum(axis=-1)
+    assert (per_token <= D).all(), name
+
+    # C1: selected gate mass covers the policy's enforced threshold, OR
+    # the selection is the Remark-2 Top-D fallback.
+    active = ctx.active_tokens()
+    for i in range(k):
+        for n in range(g.shape[1]):
+            if not active[i, n]:
+                assert per_token[i, n] == 0, "padding token was scheduled"
+                continue
+            sel = rs.alpha[i, n].astype(bool)
+            mass = g[i, n][sel].sum()
+            assert mass >= rs.qos - 1e-7 or sel.sum() == D, (name, i, n)
+
+    # C3: beta is a valid OFDMA assignment (each subcarrier on <=1 link)
+    # for every scheme that honours it (LB drops C3 by construction).
+    if name != "lb":
+        channel_lib.validate_beta(rs.beta)
+
+    # energy bookkeeping is self-consistent
+    assert np.isfinite(rs.energy)
+    assert rs.energy_trace[-1] == rs.energy
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_policy_energy_ordering(seed):
+    """Paper ordering on shared instances: LB <= JESA <= Top-k."""
+    ccfg, rates, g = _instance(seed, k=6, m=48, n_tok=4)
+    e = {name: get_policy(name).schedule(_ctx(ccfg, rates, g, seed)).energy
+         for name in ("lb", "jesa", "topk")}
+    assert e["lb"] <= e["jesa"] + 1e-9
+    assert e["jesa"] <= e["topk"] + 1e-9
+
+
+# ----------------------------------------------------------------------
+# legacy shims: bit-for-bit parity
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(3))
+def test_registry_jesa_matches_legacy_bit_for_bit(seed):
+    ccfg, rates, g = _instance(seed)
+    comp = energy_lib.make_comp_coeffs(g.shape[0])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = jesa_lib.jesa_allocate(
+            g, rates, QOS, D, comp, 8192.0, ccfg.tx_power_w,
+            rng=np.random.default_rng(seed))
+    rs = get_policy("jesa").schedule(_ctx(ccfg, rates, g, seed))
+    np.testing.assert_array_equal(legacy.alpha, rs.alpha)
+    np.testing.assert_array_equal(legacy.beta, rs.beta)
+    assert legacy.energy == rs.energy
+    assert legacy.energy_trace == rs.energy_trace
+    assert legacy.iterations == rs.iterations
+    assert legacy.converged == rs.converged
+    assert legacy.des_nodes == rs.des_nodes
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_registry_topk_and_lb_match_legacy(seed):
+    ccfg, rates, g = _instance(seed)
+    comp = energy_lib.make_comp_coeffs(g.shape[0])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        topk = jesa_lib.topk_allocate(
+            g, rates, D, comp, 8192.0, ccfg.tx_power_w)
+        lb = jesa_lib.lower_bound_allocate(
+            g, rates, QOS, D, comp, 8192.0, ccfg.tx_power_w)
+    rs_topk = get_policy("topk").schedule(_ctx(ccfg, rates, g, seed))
+    rs_lb = get_policy("lb").schedule(_ctx(ccfg, rates, g, seed))
+    np.testing.assert_array_equal(topk.alpha, rs_topk.alpha)
+    np.testing.assert_array_equal(topk.beta, rs_topk.beta)
+    assert topk.energy == rs_topk.energy
+    np.testing.assert_array_equal(lb.alpha, rs_lb.alpha)
+    np.testing.assert_array_equal(lb.beta, rs_lb.beta)
+    assert lb.energy == rs_lb.energy
+
+
+def test_legacy_shims_warn():
+    ccfg, rates, g = _instance(0)
+    comp = energy_lib.make_comp_coeffs(g.shape[0])
+    with pytest.warns(DeprecationWarning):
+        jesa_lib.topk_allocate(g, rates, D, comp, 8192.0, ccfg.tx_power_w)
+
+
+# ----------------------------------------------------------------------
+# in-graph surface
+# ----------------------------------------------------------------------
+
+def test_route_mask_surfaces():
+    import jax.numpy as jnp
+
+    gates = jnp.asarray(
+        np.random.default_rng(0).dirichlet(np.ones(6), size=(4,)),
+        dtype=jnp.float32)
+    m_topk = get_policy("topk").route_mask(gates, top_k=2)
+    assert np.asarray(m_topk).sum(axis=-1).tolist() == [2.0] * 4
+    m_des = get_policy("des").route_mask(
+        gates, qos=0.3, costs=jnp.ones((6,)), max_experts=2)
+    assert (np.asarray(m_des).sum(axis=-1) <= 2).all()
+    m_dense = get_policy("dense").route_mask(gates)
+    assert np.asarray(m_dense).sum() == gates.size
+    with pytest.raises(NotImplementedError, match="no in-graph path"):
+        get_policy("jesa").route_mask(gates)

@@ -4,7 +4,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import channel as channel_lib
 from repro.core import subcarrier as sc_lib
