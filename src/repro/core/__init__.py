@@ -19,7 +19,14 @@ from repro.core.energy import (
     comp_energy,
     total_energy,
 )
-from repro.core.des import DESResult, des_select, des_select_brute_force, lp_lower_bound
+from repro.core.des import (
+    DESBatchResult,
+    DESResult,
+    des_select,
+    des_select_batch,
+    des_select_brute_force,
+    lp_lower_bound,
+)
 from repro.core.subcarrier import allocate_subcarriers, linear_sum_assignment
 from repro.core.jesa import JESAResult, jesa_allocate, topk_allocate, lower_bound_allocate
 from repro.core.gating import QoSSchedule, aggregate_weights, softmax_gate
@@ -28,7 +35,8 @@ from repro.core.selection import route, greedy_des_mask, topk_mask, expert_comm_
 __all__ = [
     "ChannelConfig", "sample_channel_gains", "subcarrier_rates", "link_rates",
     "random_subcarrier_assignment", "make_comp_coeffs", "selection_costs",
-    "comm_energy", "comp_energy", "total_energy", "DESResult", "des_select",
+    "comm_energy", "comp_energy", "total_energy", "DESResult",
+    "DESBatchResult", "des_select", "des_select_batch",
     "des_select_brute_force", "lp_lower_bound", "allocate_subcarriers",
     "linear_sum_assignment", "JESAResult", "jesa_allocate", "topk_allocate",
     "lower_bound_allocate", "QoSSchedule", "aggregate_weights", "softmax_gate",

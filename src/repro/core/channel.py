@@ -89,20 +89,23 @@ def random_subcarrier_assignment(
 ) -> np.ndarray:
     """Feasible random beta for Algorithm 2 initialization.
 
-    Assigns each of the K(K-1) directed links one distinct subcarrier
-    (requires M >= K(K-1)); remaining subcarriers unassigned.  Satisfies the
-    exclusivity constraint C3.
+    Assigns each of the K(K-1) directed links one distinct subcarrier;
+    remaining subcarriers unassigned.  Satisfies the exclusivity
+    constraint C3.  When M < K(K-1) a fully-exclusive assignment cannot
+    cover every link: a random M-subset of links is served (one
+    subcarrier each) and the rest start at zero rate — schedulers then
+    price unserved traffic at +inf instead of crashing (the JESA
+    alpha-step steers selections away from zero-rate links anyway).
     """
     k, m = cfg.num_experts, cfg.num_subcarriers
     n_links = k * (k - 1)
-    if m < n_links:
-        raise ValueError(
-            f"need at least K(K-1)={n_links} subcarriers for a feasible "
-            f"exclusive assignment, got M={m}"
-        )
     beta = np.zeros((k, k, m), dtype=np.int8)
-    perm = rng.permutation(m)[:n_links]
     links = [(i, j) for i in range(k) for j in range(k) if i != j]
+    if m < n_links:
+        served = rng.permutation(n_links)[:m]
+        links = [links[li] for li in served]
+        n_links = m
+    perm = rng.permutation(m)[:n_links]
     for (i, j), sc in zip(links, perm):
         beta[i, j, sc] = 1
     return beta

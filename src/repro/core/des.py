@@ -59,26 +59,22 @@ def _sanitize(e: np.ndarray) -> np.ndarray:
 def lp_lower_bound(t: np.ndarray, e: np.ndarray, z: float) -> float:
     """LP relaxation value of P1(b) over experts (t, e) with QoS z.
 
-    Experts must be pre-sorted by e/t descending.  Starts from
-    all-included (score sum(t), energy sum(e)) and excludes greedily.
-    Returns 0-infeasible-safe bound; if even all-included misses z the
-    relaxation is infeasible and we return +inf is NOT correct for the
-    tree (a node is only bounded when still feasible), so we return the
-    all-included energy in that case (callers gate on feasibility first).
+    Experts must be pre-sorted by e/t descending.  This is exactly the
+    root-node bound of the B&B tree: start from all-included (score
+    sum(t), energy sum(e)) and greedily exclude, finishing with the
+    fractional exclusion of the critical expert (Eq. 11-12) — the single
+    implementation lives in `_node_bound`.
+
+    If even all-included misses z the relaxation is infeasible; callers
+    gate on feasibility before bounding (a node is only bounded while
+    still feasible), so we return the all-included energy rather than
+    +inf in that degenerate case.
     """
     score = float(t.sum())
     energy = float(e.sum())
     if score < z:
         return energy
-    for tj, ej in zip(t, e):
-        if score - tj >= z:
-            score -= tj
-            energy -= ej
-        else:
-            if tj > 0:
-                energy -= (score - z) * ej / tj
-            break
-    return energy
+    return _node_bound(0, score, energy, z, t, e)
 
 
 def top_d_fallback(t: np.ndarray, e: np.ndarray, d: int) -> np.ndarray:
@@ -195,7 +191,7 @@ def des_select(
             continue
 
         # LP bound over undecided experts [j, K) given committed state.
-        bound = _node_bound(j, tt, ee, qos, ts, es, inc_bits)
+        bound = _node_bound(j, tt, ee, qos, ts, es)
         if bound >= e_min - 1e-12:
             pruned += 1
             continue
@@ -222,13 +218,15 @@ def des_select(
     return DESResult(selected, float(e[selected].sum()), True, explored, pruned)
 
 
-def _node_bound(j, tt, ee, qos, ts, es, inc_bits) -> float:
-    """LP bound for the subtree at node (j, tt, ee): greedily exclude
-    undecided experts (already ratio-sorted) fractionally (Eq. 11-12)."""
+def _node_bound(j, tt, ee, qos, ts, es) -> float:
+    """LP bound for the subtree at node (j, tt, ee): greedily exclude the
+    undecided experts [j, K) (already ratio-sorted) while QoS is kept,
+    then exclude the critical expert fractionally (Eq. 11-12).  The root
+    call (j=0, all-included totals) IS `lp_lower_bound`."""
     score, energy = tt, ee
     for idx in range(j, len(ts)):
-        # committed inclusions cannot be excluded
-        # (only indices < j can be committed, so all [j, K) are undecided)
+        # committed decisions all live at indices < j, so [j, K) is
+        # entirely undecided and every expert may be excluded.
         tj, ej = ts[idx], es[idx]
         if score - tj >= qos:
             score -= tj
@@ -238,6 +236,429 @@ def _node_bound(j, tt, ee, qos, ts, es, inc_bits) -> float:
                 energy -= (score - qos) * ej / tj
             break
     return energy
+
+
+# ----------------------------------------------------------------------
+# Batched exact solver
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DESBatchResult:
+    """Row-wise results of `des_select_batch` (row b solves instance b)."""
+
+    selected: np.ndarray          # (B, K) bool masks in ORIGINAL expert order
+    energy: np.ndarray            # (B,) objective values
+    feasible: np.ndarray          # (B,) bool; False => Remark-2 fallback
+    nodes_explored: np.ndarray    # (B,) B&B nodes dequeued per instance
+    nodes_pruned: np.ndarray      # (B,) nodes cut by the LP bound
+
+    def __getitem__(self, b: int) -> DESResult:
+        return DESResult(
+            self.selected[b], float(self.energy[b]), bool(self.feasible[b]),
+            int(self.nodes_explored[b]), int(self.nodes_pruned[b]))
+
+    def __len__(self) -> int:
+        return self.selected.shape[0]
+
+
+def des_select_batch(
+    scores: np.ndarray,
+    costs: np.ndarray,
+    qos: np.ndarray | float,
+    max_experts: int,
+    *,
+    force_include: Optional[np.ndarray] = None,
+    deduplicate: bool = True,
+) -> DESBatchResult:
+    """Exact Algorithm 1 (DES) for a batch of B independent instances.
+
+    Equivalent to ``[des_select(scores[b], costs[b], qos[b], max_experts,
+    force_include=force_include[b]) for b in range(B)]`` — bit-identical
+    selections, energies, and node counts — but solved batch-wide:
+
+      1. identical (scores-row, costs-row, qos, force-row) instances are
+         deduplicated (gate tensors repeat heavily across tokens, and the
+         JESA sweep re-solves the same rows every BCD iteration);
+      2. the per-instance pre-work (sanitize / feasibility / ratio sort /
+         greedy-incumbent seed) runs as vectorized numpy over all unique
+         instances at once;
+      3. the branch-and-bound is *frontier-parallel*: all still-open
+         instances advance level-by-level through the (shared-depth)
+         search tree, and the Eq. 11-12 LP bound is evaluated as one
+         vectorized pass per level.  Within a level the per-instance
+         incumbent updates are replayed in exact BFS order via a
+         segmented running minimum, so pruning — and therefore node
+         counts and tie-breaking — match the sequential solver exactly.
+
+    Args:
+      scores: (B, K) gate scores t_j >= 0.
+      costs:  (B, K) selection costs e_j >= 0 (inf allowed = unreachable).
+      qos:    scalar or (B,) — z * gamma^(l) per instance.
+      max_experts: D (shared across the batch).
+      force_include: optional (B, K) bool — per-instance must-select mask.
+      deduplicate: solve only unique instances and scatter (default).
+    """
+    t = np.atleast_2d(np.asarray(scores, dtype=np.float64))
+    e_raw = np.atleast_2d(np.asarray(costs, dtype=np.float64))
+    b, k = t.shape
+    if e_raw.shape != (b, k):
+        raise ValueError(f"costs shape {e_raw.shape} != scores {t.shape}")
+    z = np.broadcast_to(np.asarray(qos, dtype=np.float64), (b,)).copy()
+    forced = (np.zeros((b, k), dtype=bool) if force_include is None
+              else np.atleast_2d(np.asarray(force_include, dtype=bool)))
+    if forced.shape != (b, k):
+        raise ValueError(
+            f"force_include shape {forced.shape} != scores {t.shape}")
+    d = int(max_experts)
+
+    if b == 0:
+        zero = np.zeros(0, dtype=np.int64)
+        return DESBatchResult(np.zeros((0, k), dtype=bool),
+                              np.zeros(0), np.zeros(0, dtype=bool), zero, zero)
+
+    if deduplicate:
+        # Sanitized costs + the finite-mask fully determine the solver's
+        # behaviour (+inf and a literal _BIG cost row must NOT collapse:
+        # all-unreachable rows take the Remark-2 path with energy=+inf).
+        e_san = np.minimum(np.where(np.isfinite(e_raw), e_raw, _BIG), _BIG)
+        key = np.hstack([t, e_san, np.isfinite(e_raw).astype(np.float64),
+                         z[:, None], forced.astype(np.float64)])
+        uniq_idx, inverse = _dedup_rows(key)
+        if uniq_idx is not None and len(uniq_idx) < b:
+            sub = des_select_batch(
+                t[uniq_idx], e_raw[uniq_idx], z[uniq_idx], d,
+                force_include=forced[uniq_idx], deduplicate=False)
+            return DESBatchResult(
+                sub.selected[inverse], sub.energy[inverse],
+                sub.feasible[inverse], sub.nodes_explored[inverse],
+                sub.nodes_pruned[inverse])
+
+    e = np.minimum(np.where(np.isfinite(e_raw), e_raw, _BIG), _BIG)
+
+    selected = np.zeros((b, k), dtype=bool)
+    energy = np.zeros(b, dtype=np.float64)
+    feasible = np.zeros(b, dtype=bool)
+    explored = np.zeros(b, dtype=np.int64)
+    pruned = np.zeros(b, dtype=np.int64)
+
+    # ---- vectorized Remark-2 feasibility screen (mirrors des_select) ----
+    all_unreachable = ~np.isfinite(e_raw).any(axis=1)
+    top_d_score = np.sort(t, axis=1)[:, ::-1][:, :d].sum(axis=1)
+    infeasible = (top_d_score < z) | (d < forced.sum(axis=1)) | all_unreachable
+    has_forced = forced.any(axis=1)
+    for row in np.flatnonzero(infeasible & has_forced):
+        # des_select returns immediately on this path (no B&B); the rare
+        # forced-trim logic stays single-source via a thin per-row call.
+        res = des_select(t[row], e_raw[row], float(z[row]), d,
+                         force_include=forced[row])
+        selected[row], energy[row] = res.selected, res.energy
+    plain = infeasible & ~has_forced
+    if plain.any():
+        rows = np.flatnonzero(plain)
+        # top_d_fallback, batched: same stable top-D-by-score mask.
+        top = np.argsort(-t[rows], axis=1, kind="stable")[:, : min(d, k)]
+        sel = np.zeros((rows.size, k), dtype=bool)
+        np.put_along_axis(sel, top, True, axis=1)
+        selected[rows] = sel
+        energy[rows] = np.where(all_unreachable[rows], np.inf,
+                                _masked_row_sums(e[rows], sel))
+
+    live = np.flatnonzero(~infeasible)
+    if live.size == 0:
+        return DESBatchResult(selected, energy, feasible, explored, pruned)
+
+    # ---- ratio sort (paper's branch order), batched ----------------------
+    tl, el, zl, fl = t[live], e[live], z[live], forced[live]
+    with np.errstate(divide="ignore"):
+        ratio = np.where(tl > 0, el / np.maximum(tl, 1e-300), np.inf)
+    order = np.argsort(-ratio, axis=1, kind="stable")
+    ts = np.take_along_axis(tl, order, axis=1)
+    es = np.take_along_axis(el, order, axis=1)
+    forced_s = np.take_along_axis(fl, order, axis=1)
+
+    sel_sorted, has_inc, exp_l, prn_l = _branch_and_bound_batch(
+        ts, es, zl, d, forced_s)
+
+    # Map back to original expert order + recompute energies exactly as
+    # the sequential solver does (masked gather-sum semantics).
+    for i in np.flatnonzero(~has_inc):  # should not happen (pre-checked)
+        row = live[i]
+        sel = top_d_fallback(t[row], e[row], d)
+        selected[row] = sel
+        energy[row] = float(e[row][sel].sum())
+    hits = np.flatnonzero(has_inc)
+    if hits.size:
+        rows = live[hits]
+        orig_sel = np.zeros((hits.size, k), dtype=bool)
+        np.put_along_axis(orig_sel, order[hits], sel_sorted[hits], axis=1)
+        selected[rows] = orig_sel
+        energy[rows] = _masked_row_sums(e[rows], orig_sel)
+        feasible[rows] = True
+    explored[live], pruned[live] = exp_l, prn_l
+    return DESBatchResult(selected, energy, feasible, explored, pruned)
+
+
+def _dedup_rows(key: np.ndarray) -> tuple[Optional[np.ndarray], np.ndarray]:
+    """Group identical rows of `key`: returns (representative row indices,
+    inverse map) like np.unique(axis=0), or (None, _) when all rows are
+    distinct.  Hash-first (one float dot + scalar sort) instead of
+    lexicographic row sorting; equal-hash neighbours are verified
+    element-wise, falling back to np.unique on a genuine hash collision."""
+    b, w = key.shape
+    weights = np.random.default_rng(0xDE5).standard_normal(w)
+    h = key @ weights
+    sort_idx = np.argsort(h, kind="stable")
+    hs = h[sort_idx]
+    same_hash = hs[1:] == hs[:-1]
+    if not same_hash.any():
+        return None, np.arange(b)
+    ks = key[sort_idx]
+    same_row = (ks[1:] == ks[:-1]).all(axis=1)
+    if (same_hash & ~same_row).any():  # hash collision (vanishing prob.)
+        _, uniq_idx, inverse = np.unique(
+            key, axis=0, return_index=True, return_inverse=True)
+        return uniq_idx, inverse.reshape(-1)  # numpy 2.x returns (B, 1)
+    new_group = np.r_[True, ~same_row]
+    group_of_sorted = np.cumsum(new_group) - 1
+    inverse = np.empty(b, dtype=np.int64)
+    inverse[sort_idx] = group_of_sorted
+    return sort_idx[new_group], inverse
+
+
+def _masked_row_sums(values: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """Row-wise ``float(values[row][mask[row]].sum())``, vectorized.
+
+    Bit-identical to the masked gather-sum of the sequential solver: for
+    fewer than 8 selected elements numpy's reduction is a plain
+    left-to-right accumulation, which the column scan reproduces exactly
+    (adding 0.0 for unselected columns is exact); wider selections fall
+    back to the literal per-row sum (numpy switches to an unrolled
+    pairwise scheme there, so the grouping must be numpy's own)."""
+    counts = mask.sum(axis=1)
+    out = np.empty(mask.shape[0], dtype=np.float64)
+    small = counts < 8
+    if small.any():
+        vs, ms = values[small], mask[small]
+        acc = np.zeros(vs.shape[0], dtype=np.float64)
+        for idx in range(values.shape[1]):
+            acc = acc + np.where(ms[:, idx], vs[:, idx], 0.0)
+        out[small] = acc
+    for row in np.flatnonzero(~small):
+        out[row] = values[row][mask[row]].sum()
+    return out
+
+
+def _segmented_running_min(vals: np.ndarray, seg_start: np.ndarray,
+                           init: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-segment running minima of `vals` (contiguous segments flagged by
+    `seg_start`), seeded with `init` (one seed per element, constant within
+    a segment).  Returns (exclusive, inclusive) running mins — the value a
+    sequential scan would hold *before* / *after* visiting each element."""
+    n = vals.shape[0]
+    shifted = np.empty(n, dtype=np.float64)
+    shifted[0] = np.inf
+    shifted[1:] = vals[:-1]
+    shifted[seg_start] = np.inf
+    # position within segment (for the boundary guard of the doubling scan)
+    starts = np.flatnonzero(seg_start)
+    seg_id = np.cumsum(seg_start) - 1
+    pos = np.arange(n) - starts[seg_id]
+    res = shifted
+    shift = 1
+    longest = int(pos.max()) + 1  # doubling only needs the longest segment
+    while shift < longest:
+        idx = np.flatnonzero(pos >= shift)
+        res[idx] = np.minimum(res[idx], res[idx - shift])
+        shift *= 2
+    exclusive = np.minimum(res, init)
+    inclusive = np.minimum(exclusive, vals)
+    return exclusive, inclusive
+
+
+def _node_bound_batch(j: int, tt: np.ndarray, ee: np.ndarray,
+                      qos, ts: np.ndarray, es: np.ndarray,
+                      rows: np.ndarray) -> np.ndarray:
+    """Vectorized `_node_bound` for a frontier of same-depth nodes: one
+    Eq. 11-12 greedy/fractional-exclusion pass over positions [j, K) for
+    all nodes at once.  `ts`/`es` are the full sorted (F, K) instance
+    tables, `rows` maps each node to its instance, and `qos` is a python
+    float for uniform-QoS batches (the common case) or a (F,) array."""
+    k = ts.shape[1]
+    tsg, esg = ts[rows], es[rows]
+    q = qos if isinstance(qos, float) else qos[rows]
+    energy = ee.copy()
+    score = tt.copy()
+    live = None  # level j: every node still excludes greedily
+    for idx in range(j, k):
+        tj, ej = tsg[:, idx], esg[:, idx]
+        rem = score - tj
+        exc = (rem >= q) if live is None else live & (rem >= q)
+        crit = ~exc if live is None else live & ~exc
+        score = np.where(exc, rem, score)
+        if crit.any():
+            # fractional exclusion of the critical expert (where t_j > 0)
+            ci = np.flatnonzero(crit & (tj > 0))
+            qq = q if isinstance(q, float) else q[ci]
+            energy = np.where(exc, energy - ej, energy)
+            energy[ci] -= (score[ci] - qq) * ej[ci] / tj[ci]
+        else:
+            energy = np.where(exc, energy - ej, energy)
+        live = exc  # critical expert (fractional or t_j=0) ends the pass
+        if not live.any():
+            break
+    return energy
+
+
+def _branch_and_bound_batch(ts, es, qos, d, forced_s):
+    """Frontier-parallel B&B over F pre-screened-feasible instances.
+
+    All instances share depth: level j holds every live node whose next
+    undecided expert is j, so the per-level work (incumbent replay, LP
+    bound, child expansion) is plain vectorized numpy over one frontier.
+    Node visit order within an instance is exactly the sequential BFS
+    order, so incumbents, pruning, and node counts match `des_select`.
+    Returns (sel_sorted (F, K), has_incumbent (F,), explored, pruned).
+    """
+    f, k = ts.shape
+    # Uniform QoS (one sweep = one threshold) skips all per-node gathers.
+    qu: Optional[float] = float(qos[0]) if (qos == qos[0]).all() else None
+    qv = qu if qu is not None else qos
+
+    # Greedy integral incumbent seed (same scan as des_select, batched).
+    g_sel = np.ones((f, k), dtype=bool)
+    g_score = ts.sum(axis=1)
+    for idx in range(k):
+        can = ~forced_s[:, idx] & (g_score - ts[:, idx] >= qv)
+        g_sel[can, idx] = False
+        g_score = np.where(can, g_score - ts[:, idx], g_score)
+    seeded = g_sel.sum(axis=1) <= d
+    e_min = np.full(f, np.inf)
+    e_min[seeded] = _masked_row_sums(es[seeded], g_sel[seeded])
+    sel_min = np.zeros((f, k), dtype=bool)
+    sel_min[seeded] = g_sel[seeded]
+    has_inc = seeded.copy()
+
+    # explored/pruned accounting is deferred: every created node is
+    # dequeued exactly once, so one bincount over the per-level frontier
+    # snapshots at the end replaces two bincounts per level.
+    explored_lists: list = []
+    pruned_lists: list = []
+
+    # Root frontier: one all-included node per instance.  `bnd` caches a
+    # node's LP bound: a left child (exclude j) inherits its parent's
+    # bound bit-for-bit — the parent's greedy pass starts with exactly
+    # that exclusion — so only right children and roots evaluate fresh
+    # bounds (NaN = not yet evaluated).  A node at level j has decided j
+    # experts, so n_exc == j - n_inc and only n_inc is carried.
+    inst = np.arange(f)
+    tt = ts.sum(axis=1)
+    ee = es.sum(axis=1)
+    n_inc = np.zeros(f, dtype=np.int64)
+    exc_mask = np.zeros((f, k), dtype=bool)
+    bnd = np.full(f, np.nan)
+
+    for j in range(k + 1):
+        if inst.size == 0:
+            break
+        explored_lists.append(inst)
+        meets_qos = tt >= (qu if qu is not None else qos[inst])
+
+        # --- incumbent replay in BFS order (segmented running min) ------
+        # A node can only improve the incumbent once |P_exc| >= K - D, and
+        # n_exc <= j, so early levels (j < K - D) skip the scan entirely.
+        if j >= k - d:
+            cand = meets_qos & (j - n_inc >= k - d)
+            vals = np.where(cand, ee, np.inf)
+            seg_start = np.empty(inst.size, dtype=bool)
+            seg_start[0] = True
+            seg_start[1:] = inst[1:] != inst[:-1]
+            run_excl, run_incl = _segmented_running_min(
+                vals, seg_start, e_min[inst])
+            improve = cand & (ee < run_excl)
+            if improve.any():
+                imp = np.flatnonzero(improve)
+                # improvements strictly decrease, so the LAST improving
+                # node per instance holds that instance's new incumbent.
+                last = imp[np.flatnonzero(
+                    np.r_[inst[imp][1:] != inst[imp][:-1], True])]
+                rows = inst[last]
+                e_min[rows] = ee[last]
+                sel_min[rows] = ~exc_mask[last]
+                has_inc[rows] = True
+        else:
+            run_incl = e_min[inst]
+
+        # --- terminal / bound / prune -----------------------------------
+        if j >= k:
+            break
+        if meets_qos.all():  # common: both child rules preserve C1
+            keep_base = None
+            btt, bee, bi, binc, bval = tt, ee, inst, run_incl, bnd
+        else:
+            keep_base = np.flatnonzero(meets_qos)
+            if keep_base.size == 0:
+                break
+            btt, bee, bi = tt[keep_base], ee[keep_base], inst[keep_base]
+            binc = run_incl[keep_base]
+            bval = bnd[keep_base]
+        fresh = np.flatnonzero(np.isnan(bval))
+        if fresh.size:
+            bval[fresh] = _node_bound_batch(
+                j, btt[fresh], bee[fresh], qu if qu is not None else qos,
+                ts, es, bi[fresh])
+        cut = bval >= binc - 1e-12
+        if cut.any():
+            pruned_lists.append(bi[cut])
+            keep_local = np.flatnonzero(~cut)
+            if keep_local.size == 0:
+                break
+            keep = (keep_local if keep_base is None
+                    else keep_base[keep_local])
+            ki, ktt, kee = inst[keep], tt[keep], ee[keep]
+            kinc = n_inc[keep]
+            kmask, kbnd = exc_mask[keep], bval[keep_local]
+        elif keep_base is None:
+            ki, ktt, kee, kinc, kmask, kbnd = (
+                inst, tt, ee, n_inc, exc_mask, bval)
+        else:
+            ki, ktt, kee, kbnd = bi, btt, bee, bval
+            kinc = n_inc[keep_base]
+            kmask = exc_mask[keep_base]
+
+        # --- expand: left (exclude j) then right (include j) ------------
+        tsj, esj = ts[ki, j], es[ki, j]
+        left_ok = ~forced_s[ki, j] & (
+            ktt - tsj >= (qu if qu is not None else qos[ki]))
+        right_ok = kinc + 1 <= d
+        nk = ki.size
+        child_ok = np.empty(2 * nk, dtype=bool)
+        child_ok[0::2], child_ok[1::2] = left_ok, right_ok
+
+        inst2 = np.repeat(ki, 2)
+        tt2 = np.repeat(ktt, 2)
+        ee2 = np.repeat(kee, 2)
+        tt2[0::2] -= tsj
+        ee2[0::2] -= esj
+        n_inc2 = np.repeat(kinc, 2)
+        n_inc2[1::2] += 1
+        exc2 = np.repeat(kmask, 2, axis=0)
+        exc2[0::2, j] = True
+        bnd2 = np.repeat(kbnd, 2)
+        bnd2[1::2] = np.nan  # right children re-evaluate at their level
+
+        inst = inst2[child_ok]
+        tt, ee = tt2[child_ok], ee2[child_ok]
+        n_inc = n_inc2[child_ok]
+        exc_mask = exc2[child_ok]
+        bnd = bnd2[child_ok]
+
+    explored = np.bincount(
+        np.concatenate(explored_lists) if explored_lists
+        else np.zeros(0, dtype=np.int64), minlength=f)
+    pruned = np.bincount(
+        np.concatenate(pruned_lists) if pruned_lists
+        else np.zeros(0, dtype=np.int64), minlength=f)
+    return sel_min, has_inc, explored, pruned
 
 
 def des_select_brute_force(

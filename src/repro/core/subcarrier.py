@@ -98,8 +98,16 @@ def allocate_subcarriers(
     p0: float,
     *,
     method: str = "auto",
+    strict: bool = False,
 ) -> np.ndarray:
     """Solve P3(a): returns beta (K, K, M) with C3 + one-subcarrier-per-link.
+
+    When the traffic is C3-infeasible (more active links than subcarriers)
+    the top-M links by scheduled bytes are served and the rest get no
+    subcarrier — their links stay at zero rate, so the energy accountants
+    (`energy.comm_energy`, `assignment_energy`) price the round at +inf
+    rather than crashing a scheduler policy mid-layer.  Pass strict=True
+    to raise instead (validation / direct API use).
 
     Args:
       s_bytes: (K, K) scheduled bytes s_ij (diagonal ignored).
@@ -107,6 +115,8 @@ def allocate_subcarriers(
       p0: per-subcarrier transmit power (scales weights; argmin-invariant
         per link but kept for objective fidelity).
       method: "auto" (fast path then Hungarian), "hungarian", "greedy".
+      strict: raise ValueError on C3-infeasible traffic instead of
+        serving the top-M links.
     """
     k, _, m = rates.shape
     beta = np.zeros((k, k, m), dtype=np.int8)
@@ -116,9 +126,15 @@ def allocate_subcarriers(
     if n_links == 0:
         return beta
     if n_links > m:
-        raise ValueError(
-            f"{n_links} active links exceed M={m} subcarriers (C3 infeasible)"
-        )
+        if strict:
+            raise ValueError(
+                f"{n_links} active links exceed M={m} subcarriers "
+                f"(C3 infeasible)"
+            )
+        heaviest = np.argsort(-s_bytes[links[:, 0], links[:, 1]],
+                              kind="stable")[:m]
+        links = links[np.sort(heaviest)]
+        n_links = m
 
     if method == "auto":
         fast = max_rate_assignment(rates, links)

@@ -36,15 +36,20 @@ class GreedyDESPolicy(SchedulerPolicy):
     Top-D fallback), and fully traceable for in-graph routing."""
 
     def __init__(self, *, max_experts: Optional[int] = None,
-                 beta_method: str = "auto"):
+                 beta_method: str = "auto", qos: Optional[float] = None):
         self.max_experts = max_experts  # None -> call-site / ctx value
         self.beta_method = beta_method
+        self.qos = qos  # None -> use ctx.qos (the layer schedule)
+
+    def effective_qos(self, ctx: ScheduleContext) -> float:
+        return ctx.qos if self.qos is None else self.qos
 
     def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
         import jax.numpy as jnp
         from repro.core import selection as sel_lib
 
         d = self.max_experts if self.max_experts is not None else ctx.max_experts
+        qos = self.effective_qos(ctx)
         # Cost estimate under the per-link best subcarrier (the beta-step
         # then reallocates optimally for the realized traffic).
         beta0 = best_subcarrier_beta(ctx.rates)
@@ -57,14 +62,14 @@ class GreedyDESPolicy(SchedulerPolicy):
         mask = sel_lib.greedy_des_mask(
             jnp.asarray(ctx.gate_scores, dtype=jnp.float32),
             jnp.asarray(costs, dtype=jnp.float32)[:, None, :],
-            ctx.qos, d)
+            qos, d)
         alpha = np.asarray(mask, dtype=np.int8)
         alpha *= ctx.active_tokens()[..., None].astype(np.int8)
 
         beta = _allocate_beta(alpha, ctx, self.beta_method)
         obj = _round_energy(alpha, beta, ctx)
         return RoundSchedule(
-            layer=ctx.layer, alpha=alpha, beta=beta, qos=ctx.qos,
+            layer=ctx.layer, alpha=alpha, beta=beta, qos=qos,
             policy=self.name, energy=obj, energy_trace=[obj],
             iterations=1, converged=True, des_nodes=0)
 

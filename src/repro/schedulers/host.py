@@ -29,12 +29,10 @@ from repro.schedulers.base import (
 def _round_energy(alpha: np.ndarray, beta: np.ndarray, ctx: ScheduleContext
                   ) -> float:
     """P2 objective for a completed (alpha, beta) decision."""
-    k = alpha.shape[0]
     rates_kk = channel_lib.link_rates(ctx.rates, beta)
-    s_full = ctx.s0 * alpha.sum(axis=1).astype(np.float64)
-    return energy_lib.comm_energy(
-        np.where(np.eye(k, dtype=bool), 0.0, s_full), rates_kk, beta, ctx.p0
-    ) + energy_lib.comp_energy(s_full, ctx.comp_coeff, ctx.comp_static)
+    return energy_lib.total_energy(
+        alpha, beta, rates_kk, ctx.comp_coeff, ctx.s0, ctx.p0,
+        comp_static=ctx.comp_static)
 
 
 def _allocate_beta(alpha: np.ndarray, ctx: ScheduleContext,
@@ -48,19 +46,25 @@ def _allocate_beta(alpha: np.ndarray, ctx: ScheduleContext,
 
 def _des_sweep(gate_scores: np.ndarray, costs: np.ndarray, qos: float,
                max_experts: int) -> tuple[np.ndarray, int]:
-    """Exact DES per (source i, token n); returns (alpha, nodes)."""
-    k, n_tok, _ = gate_scores.shape
-    alpha = np.zeros_like(gate_scores, dtype=np.int8)
-    nodes = 0
-    for i in range(k):
-        for n in range(n_tok):
-            g = gate_scores[i, n]
-            if g.sum() <= 0:  # padding token
-                continue
-            res = des_lib.des_select(g, costs[i], qos, max_experts)
-            nodes += res.nodes_explored
-            alpha[i, n] = res.selected.astype(np.int8)
-    return alpha, nodes
+    """Exact DES for every (source i, token n) at once; returns
+    (alpha, nodes).  All K*N instances go through one
+    `des_lib.des_select_batch` call (dedup + frontier-parallel B&B) —
+    bit-identical to the per-(i, n) `des_select` loop it replaced."""
+    k, n_tok, n_exp = gate_scores.shape
+    flat = np.asarray(gate_scores, dtype=np.float64).reshape(k * n_tok, n_exp)
+    active = flat.sum(axis=1) > 0  # padding tokens are never scheduled
+    cost_rows = np.repeat(np.asarray(costs, dtype=np.float64), n_tok, axis=0)
+    if active.all():
+        res = des_lib.des_select_batch(flat, cost_rows, qos, max_experts)
+        alpha = res.selected.astype(np.int8)
+    elif active.any():
+        res = des_lib.des_select_batch(
+            flat[active], cost_rows[active], qos, max_experts)
+        alpha = np.zeros((k * n_tok, n_exp), dtype=np.int8)
+        alpha[active] = res.selected.astype(np.int8)
+    else:
+        return np.zeros_like(gate_scores, dtype=np.int8), 0
+    return alpha.reshape(gate_scores.shape), int(res.nodes_explored.sum())
 
 
 def best_subcarrier_beta(rates: np.ndarray) -> np.ndarray:
@@ -186,14 +190,13 @@ class TopKPolicy(SchedulerPolicy):
     def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
         k, n_tok, _ = ctx.gate_scores.shape
         top_k = self.top_k if self.top_k is not None else ctx.top_k
+        # One argsort over all (source, token) rows (same stable order as
+        # the former per-token loop); padding rows are masked afterwards.
         alpha = np.zeros((k, n_tok, k), dtype=np.int8)
-        for i in range(k):
-            for n in range(n_tok):
-                g = ctx.gate_scores[i, n]
-                if g.sum() <= 0:
-                    continue
-                sel = np.argsort(-g, kind="stable")[:top_k]
-                alpha[i, n, sel] = 1
+        sel = np.argsort(-ctx.gate_scores, axis=-1,
+                         kind="stable")[..., :top_k]
+        np.put_along_axis(alpha, sel, 1, axis=-1)
+        alpha *= ctx.active_tokens()[..., None].astype(np.int8)
         beta = _allocate_beta(alpha, ctx, self.beta_method)
         obj = _round_energy(alpha, beta, ctx)
         return RoundSchedule(

@@ -1,0 +1,152 @@
+"""Batched exact DES (`des_select_batch`): bit-for-bit equivalence with
+the per-instance solver and the brute-force oracle, including +inf costs,
+all-unreachable rows, padding (all-zero-score) tokens, `force_include`,
+duplicated rows (the dedup path), and per-row QoS."""
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.core import des as des_lib
+
+
+def _assert_batch_matches_reference(t, e, qos, d, forced=None):
+    batch = des_lib.des_select_batch(t, e, qos, d, force_include=forced)
+    assert len(batch) == t.shape[0]
+    for i in range(t.shape[0]):
+        fi = None if forced is None else forced[i]
+        ref = des_lib.des_select(t[i], e[i], float(qos[i]), d,
+                                 force_include=fi)
+        np.testing.assert_array_equal(
+            batch.selected[i], ref.selected,
+            err_msg=f"row {i}: selection mismatch")
+        if np.isinf(ref.energy):
+            assert np.isinf(batch.energy[i])
+        else:
+            assert batch.energy[i] == ref.energy, f"row {i}"
+        assert batch.feasible[i] == ref.feasible, f"row {i}"
+        assert batch.nodes_explored[i] == ref.nodes_explored, f"row {i}"
+        assert batch.nodes_pruned[i] == ref.nodes_pruned, f"row {i}"
+        # __getitem__ round-trips to a per-instance DESResult
+        assert isinstance(batch[i], des_lib.DESResult)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(2, 8),
+    b=st.integers(1, 16),
+    d=st.integers(1, 8),
+    uniform_qos=st.booleans(),
+    with_forced=st.booleans(),
+)
+def test_property_batch_equals_per_instance(seed, k, b, d, uniform_qos,
+                                            with_forced):
+    rng = np.random.default_rng(seed)
+    d = min(d, k)
+    t = rng.dirichlet(np.ones(k), size=b)
+    e = rng.uniform(0.01, 5.0, size=(b, k))
+    e[rng.random((b, k)) < 0.15] = np.inf          # unreachable experts
+    if b >= 2:
+        e[0] = np.inf                              # all-unreachable row
+        t[1] = 0.0                                 # padding-style row
+    if b >= 4:
+        t[3], e[3] = t[2], e[2]                    # duplicate (dedup path)
+    qos = rng.uniform(0.05, 0.95, size=b)
+    if uniform_qos:
+        qos[:] = qos[0]
+    if b >= 4:
+        qos[3] = qos[2]
+    forced = (rng.random((b, k)) < 0.15) if with_forced else None
+    _assert_batch_matches_reference(t, e, qos, d, forced)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 7),
+       b=st.integers(1, 8))
+def test_property_batch_equals_brute_force(seed, k, b):
+    rng = np.random.default_rng(seed)
+    t = rng.dirichlet(np.ones(k), size=b)
+    e = rng.uniform(0.01, 5.0, size=(b, k))
+    qos = rng.uniform(0.05, 0.95, size=b)
+    d = int(rng.integers(1, k + 1))
+    batch = des_lib.des_select_batch(t, e, qos, d)
+    for i in range(b):
+        brute = des_lib.des_select_brute_force(t[i], e[i], float(qos[i]), d)
+        assert batch.feasible[i] == brute.feasible
+        if brute.feasible:
+            np.testing.assert_allclose(batch.energy[i], brute.energy,
+                                       rtol=1e-9)
+            assert t[i][batch.selected[i]].sum() >= qos[i] - 1e-12
+            assert batch.selected[i].sum() <= d
+
+
+def test_batch_scalar_qos_broadcasts():
+    rng = np.random.default_rng(0)
+    t = rng.dirichlet(np.ones(5), size=6)
+    e = rng.uniform(0.1, 2.0, size=(6, 5))
+    batch = des_lib.des_select_batch(t, e, 0.4, 2)
+    _assert_batch_matches_reference(t, e, np.full(6, 0.4), 2)
+    assert batch.selected.shape == (6, 5)
+
+
+def test_batch_empty():
+    res = des_lib.des_select_batch(
+        np.zeros((0, 4)), np.zeros((0, 4)), 0.5, 2)
+    assert len(res) == 0
+    assert res.selected.shape == (0, 4)
+
+
+def test_batch_dedup_disabled_matches():
+    rng = np.random.default_rng(1)
+    t = np.repeat(rng.dirichlet(np.ones(4), size=2), 3, axis=0)
+    e = np.repeat(rng.uniform(0.1, 2.0, size=(2, 4)), 3, axis=0)
+    a = des_lib.des_select_batch(t, e, 0.5, 2, deduplicate=True)
+    b = des_lib.des_select_batch(t, e, 0.5, 2, deduplicate=False)
+    np.testing.assert_array_equal(a.selected, b.selected)
+    np.testing.assert_array_equal(a.energy, b.energy)
+    np.testing.assert_array_equal(a.nodes_explored, b.nodes_explored)
+
+
+def test_batch_all_unreachable_rows_priced_inf():
+    t = np.array([[0.4, 0.3, 0.2, 0.1]] * 2)
+    e = np.array([[np.inf] * 4, [0.5, np.inf, 0.25, 1.0]])
+    res = des_lib.des_select_batch(t, e, np.array([0.5, 0.5]), 2)
+    assert not res.feasible[0] and res.energy[0] == np.inf
+    assert set(np.nonzero(res.selected[0])[0]) == {0, 1}  # Top-D by score
+    assert res.feasible[1] and np.isfinite(res.energy[1])
+    assert not res.selected[1][1]  # unreachable expert avoided
+
+
+def test_batch_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="costs shape"):
+        des_lib.des_select_batch(np.ones((2, 3)), np.ones((2, 4)), 0.5, 2)
+
+
+def test_host_sweep_matches_per_token_loop():
+    """`_des_sweep` (now batched) must reproduce the per-(i, n) loop it
+    replaced, padding tokens included."""
+    from repro.schedulers.host import _des_sweep
+
+    k, n_tok = 5, 12
+    rng = np.random.default_rng(3)
+    gates = rng.dirichlet(np.ones(k), size=(k, n_tok))
+    gates[0, -1] = 0.0   # padding token
+    gates[2, 0] = 0.0
+    costs = rng.uniform(0.1, 3.0, size=(k, k))
+    costs[1, 3] = np.inf
+    qos, d = 0.45, 2
+
+    alpha, nodes = _des_sweep(gates, costs, qos, d)
+    ref_alpha = np.zeros_like(alpha)
+    ref_nodes = 0
+    for i in range(k):
+        for n in range(n_tok):
+            if gates[i, n].sum() <= 0:
+                continue
+            r = des_lib.des_select(gates[i, n], costs[i], qos, d)
+            ref_nodes += r.nodes_explored
+            ref_alpha[i, n] = r.selected.astype(np.int8)
+    np.testing.assert_array_equal(alpha, ref_alpha)
+    assert nodes == ref_nodes
+    assert (alpha[0, -1] == 0).all() and (alpha[2, 0] == 0).all()

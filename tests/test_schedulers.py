@@ -157,6 +157,73 @@ def test_policy_energy_ordering(seed):
 
 
 # ----------------------------------------------------------------------
+# C3-infeasible traffic: no policy may raise mid-layer
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ("dense", "topk", "jesa", "des-greedy"))
+def test_c3_infeasible_traffic_never_raises(name):
+    """Regression: heavy traffic (active links > M) used to crash
+    `allocate_subcarriers` with a ValueError from inside every policy's
+    beta-step.  Policies must instead serve the top-M links and surface
+    energy=inf for the unserved remainder."""
+    k, m = 4, 3  # dense traffic needs K*(K-1)=12 links but M=3
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
+    rng = np.random.default_rng(0)
+    gains = channel_lib.sample_channel_gains(ccfg, rng)
+    rates = channel_lib.subcarrier_rates(ccfg, gains)
+    g = rng.dirichlet(np.ones(k), size=(k, 3))
+    ctx = ScheduleContext(
+        gate_scores=g, rates=rates, layer=1, qos=QOS,
+        max_experts=k, top_k=k,
+        comp_coeff=energy_lib.make_comp_coeffs(k),
+        s0=8192.0, p0=ccfg.tx_power_w, rng=np.random.default_rng(0))
+    rs = get_policy(name).schedule(ctx)  # must not raise
+    assert isinstance(rs, RoundSchedule)
+    channel_lib.validate_beta(rs.beta)   # served links still honour C3
+    if rs.alpha.sum(axis=1).astype(bool)[~np.eye(k, dtype=bool)].sum() > m:
+        assert rs.energy == np.inf       # unserved links priced honestly
+
+
+# ----------------------------------------------------------------------
+# QoS overrides route through effective_qos (greedy DES regression)
+# ----------------------------------------------------------------------
+
+def test_greedy_des_qos_override_parity_with_lb():
+    """Regression: GreedyDESPolicy.schedule read ctx.qos directly, so a
+    constructor QoS override (e.g. a homogeneous-z schedule) was silently
+    ignored — inconsistent with every host policy (lb, jesa)."""
+    z = 0.55
+    ccfg, rates, g = _instance(0)
+    ctx = ScheduleContext(
+        gate_scores=g, rates=rates, layer=1,
+        qos=0.05,  # the layer schedule the override must beat
+        qos_schedule=QoSSchedule(z=1.0, gamma0=0.7, homogeneous_z=z),
+        max_experts=D, top_k=D,
+        comp_coeff=energy_lib.make_comp_coeffs(g.shape[0]),
+        s0=8192.0, p0=ccfg.tx_power_w, rng=np.random.default_rng(0))
+
+    greedy = get_policy("des-greedy", qos=z)
+    lb = get_policy("lb", qos=z)
+    assert greedy.effective_qos(ctx) == lb.effective_qos(ctx) == z
+
+    rs_greedy = greedy.schedule(ctx)
+    rs_lb = lb.schedule(ctx)
+    assert rs_greedy.qos == rs_lb.qos == z
+
+    # Both policies enforce C1 at the OVERRIDDEN threshold (or Top-D):
+    # pre-fix, greedy enforced ctx.qos=0.05 and left tokens below z.
+    active = ctx.active_tokens()
+    for rs in (rs_greedy, rs_lb):
+        for i in range(g.shape[0]):
+            for n in range(g.shape[1]):
+                if not active[i, n]:
+                    continue
+                sel = rs.alpha[i, n].astype(bool)
+                assert (g[i, n][sel].sum() >= z - 1e-6
+                        or sel.sum() == D), (rs.policy, i, n)
+
+
+# ----------------------------------------------------------------------
 # legacy shims: bit-for-bit parity
 # ----------------------------------------------------------------------
 

@@ -80,9 +80,31 @@ def test_fast_path_matches_hungarian_when_distinct():
     assert e_auto == pytest.approx(e_hung, rel=1e-9)
 
 
-def test_too_many_links_raises():
+def test_too_many_links_strict_raises():
     rates = np.ones((4, 4, 3))
     s = np.full((4, 4), 1.0)
     np.fill_diagonal(s, 0.0)
-    with pytest.raises(ValueError):
-        sc_lib.allocate_subcarriers(s, rates, 1e-2)
+    with pytest.raises(ValueError, match="C3 infeasible"):
+        sc_lib.allocate_subcarriers(s, rates, 1e-2, strict=True)
+
+
+def test_too_many_links_serves_top_m_by_bytes():
+    """C3-infeasible traffic (12 links, M=3) is served greedily: the
+    three heaviest links each get one subcarrier, the rest none, and the
+    round is priced at +inf by the energy accountant — no exception."""
+    cfg = channel_lib.ChannelConfig(num_experts=4, num_subcarriers=3)
+    rng = np.random.default_rng(2)
+    gains = channel_lib.sample_channel_gains(cfg, rng)
+    rates = channel_lib.subcarrier_rates(cfg, gains)
+    s = rng.uniform(1.0, 10.0, size=(4, 4)) * 8192.0
+    np.fill_diagonal(s, 0.0)
+
+    beta = sc_lib.allocate_subcarriers(s, rates, cfg.tx_power_w)
+    channel_lib.validate_beta(beta)
+    assert beta.sum() == 3  # exactly M links served
+    served = set(map(tuple, np.argwhere(beta.sum(axis=-1) > 0)))
+    links = np.argwhere(~np.eye(4, dtype=bool) & (s > 0))
+    order = np.argsort(-s[links[:, 0], links[:, 1]], kind="stable")[:3]
+    assert served == set(map(tuple, links[order]))
+    # unserved traffic -> +inf objective, never an exception
+    assert sc_lib.assignment_energy(s, rates, beta, cfg.tx_power_w) == np.inf
