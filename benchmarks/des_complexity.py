@@ -7,16 +7,23 @@ CLI::
 
     PYTHONPATH=src python -m benchmarks.des_complexity [--quick]
         [--out BENCH_des_sweep.json] [--k 8] [--n-tokens 256]
+    PYTHONPATH=src python -m benchmarks.des_complexity --quick --sharded
+        [--out BENCH_des_sharded.json]
 
 writes a ``BENCH_des_sweep.json`` artifact recording per-layer and
 overall loop-vs-batch wall-clock so the perf trajectory of the batched
-solver is tracked over time.
+solver is tracked over time.  ``--sharded`` instead benchmarks the
+device-sharded front-end (`repro.schedulers.sharded`) against the host
+batch solver on a multi-device mesh (forcing a 4-device host platform
+when no accelerators are present), recording the in-graph easy/hard
+resolution split — the easy path never runs per-instance numpy.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import numpy as np
@@ -43,19 +50,11 @@ def _loop_sweep(gates: np.ndarray, costs: np.ndarray, qos: float, d: int):
     return alpha, nodes
 
 
-def run_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
-              qos_z: float = 1.0, gamma0: float = 0.7, num_layers: int = 3,
-              reps: int = 3, seed: int = 7, out_path: str | None = None,
-              verbose: bool = True) -> dict:
-    """Benchmark the JESA alpha-step sweep: batched vs per-(i, n) loop.
-
-    Reproduces exactly the instances JESA solves per BCD iteration — a
-    (K, N, K) gate tensor against per-source selection-cost rows under a
-    random OFDMA assignment — for each layer of the paper's default QoS
-    schedule z * gamma0^l, and checks the selections are bit-identical.
-    """
-    from repro.schedulers.host import _des_sweep
-
+def _alpha_step_instances(k: int, n_tokens: int, seed: int
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """The instances JESA solves per BCD iteration: a (K, N, K) gate
+    tensor + per-source selection-cost rows under a random OFDMA
+    assignment (shared by the batched and the sharded sweeps)."""
     rng = np.random.default_rng(seed)
     gates = rng.dirichlet(np.ones(k), size=(k, n_tokens))
     ccfg = channel_lib.ChannelConfig(
@@ -67,6 +66,22 @@ def run_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
     costs = energy_lib.selection_costs(
         rates_kk, beta, energy_lib.make_comp_coeffs(k), 8192.0,
         ccfg.tx_power_w)
+    return gates, costs
+
+
+def run_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
+              qos_z: float = 1.0, gamma0: float = 0.7, num_layers: int = 3,
+              reps: int = 3, seed: int = 7, out_path: str | None = None,
+              verbose: bool = True) -> dict:
+    """Benchmark the JESA alpha-step sweep: batched vs per-(i, n) loop.
+
+    Reproduces exactly the instances JESA solves per BCD iteration for
+    each layer of the paper's default QoS schedule z * gamma0^l, and
+    checks the selections are bit-identical.
+    """
+    from repro.schedulers.host import _des_sweep
+
+    gates, costs = _alpha_step_instances(k, n_tokens, seed)
 
     layers = []
     identical = True
@@ -129,6 +144,107 @@ def run_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
     return summary
 
 
+def run_sharded_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
+                      qos_z: float = 1.0, gamma0: float = 0.7,
+                      num_layers: int = 3, reps: int = 3, seed: int = 7,
+                      out_path: str | None = None,
+                      verbose: bool = True) -> dict:
+    """Benchmark the device-sharded DES front-end against the host batch
+    solver on the JESA alpha-step instances.
+
+    `sharded_des_select_batch` jit-compiles the pre-work (sanitize /
+    feasibility screen / ratio sort / greedy seed / root LP bound) under
+    `shard_map` over the batch mesh; instances the root bound resolves
+    ("easy") never touch per-instance numpy — only the hard residual
+    reaches the host B&B.  Results are asserted bit-identical
+    (selections, energies, feasibility, node counts).
+    """
+    import jax
+
+    from repro.distributed.sharding import make_batch_mesh
+    from repro.schedulers.sharded import sharded_des_select_batch
+
+    gates, costs = _alpha_step_instances(k, n_tokens, seed)
+    flat = gates.reshape(k * n_tokens, k)
+    cost_rows = np.repeat(costs, n_tokens, axis=0)
+    mesh = make_batch_mesh()
+    n_dev = len(jax.devices())
+
+    layers = []
+    identical = True
+    batch_total = sharded_total = 0.0
+    for layer in range(1, num_layers + 1):
+        qos = qos_z * gamma0 ** layer
+        stats: dict = {}
+        res_batch = des_lib.des_select_batch(flat, cost_rows, qos, d)
+        res_shard = sharded_des_select_batch(
+            flat, cost_rows, qos, d, mesh=mesh, stats=stats)
+        same = bool(
+            np.array_equal(res_batch.selected, res_shard.selected)
+            and np.array_equal(res_batch.energy, res_shard.energy)
+            and np.array_equal(res_batch.feasible, res_shard.feasible)
+            and np.array_equal(res_batch.nodes_explored,
+                               res_shard.nodes_explored)
+            and np.array_equal(res_batch.nodes_pruned,
+                               res_shard.nodes_pruned))
+        identical &= same
+        t_batch, t_shard = [], []
+        for _ in range(reps):  # both paths warm (jit cache hit for shard)
+            t0 = time.perf_counter()
+            des_lib.des_select_batch(flat, cost_rows, qos, d)
+            t_batch.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            sharded_des_select_batch(flat, cost_rows, qos, d, mesh=mesh)
+            t_shard.append(time.perf_counter() - t0)
+        batch_total += min(t_batch)
+        sharded_total += min(t_shard)
+        layers.append({
+            "layer": layer,
+            "qos": round(qos, 6),
+            "batch_ms": round(min(t_batch) * 1e3, 3),
+            "sharded_ms": round(min(t_shard) * 1e3, 3),
+            "easy_in_graph": stats.get("easy", 0),
+            "hard_host_residual": stats.get("hard", 0),
+            "infeasible_in_graph": stats.get("infeasible", 0),
+            "bit_identical": same,
+        })
+
+    summary = {
+        "bench": "des_sharded",
+        "k": k,
+        "n_tokens": n_tokens,
+        "max_experts": d,
+        "qos_schedule": {"z": qos_z, "gamma0": gamma0},
+        "reps": reps,
+        "n_devices": n_dev,
+        "prework_jitted": True,  # shard_map'd jax pipeline, no numpy
+        "layers": layers,
+        "batch_ms_total": round(batch_total * 1e3, 3),
+        "sharded_ms_total": round(sharded_total * 1e3, 3),
+        "easy_in_graph_total": int(sum(r["easy_in_graph"] for r in layers)),
+        "hard_host_residual_total": int(
+            sum(r["hard_host_residual"] for r in layers)),
+        "bit_identical": identical,
+    }
+    if verbose:
+        print(f"devices: {n_dev} (mesh axes {dict(mesh.shape)})")
+        print(f"{'layer':>6}{'qos':>8}{'batch ms':>10}{'sharded ms':>12}"
+              f"{'easy':>7}{'hard':>7}{'identical':>10}")
+        for row in layers:
+            print(f"{row['layer']:>6}{row['qos']:>8.3f}"
+                  f"{row['batch_ms']:>10.1f}{row['sharded_ms']:>12.1f}"
+                  f"{row['easy_in_graph']:>7}{row['hard_host_residual']:>7}"
+                  f"{str(row['bit_identical']):>10}")
+        print(f"overall: {summary['easy_in_graph_total']} easy in-graph, "
+              f"{summary['hard_host_residual_total']} hard -> host B&B")
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(summary, fh, indent=2)
+        if verbose:
+            print(f"wrote {out_path}")
+    return summary
+
+
 def run(verbose: bool = True, sweep: dict | None = None):
     rows = []
     rng = np.random.default_rng(3)
@@ -181,13 +297,34 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="single timing rep per layer (CI artifact mode)")
-    ap.add_argument("--out", default="BENCH_des_sweep.json")
+    ap.add_argument("--sharded", action="store_true",
+                    help="benchmark the device-sharded front-end instead "
+                         "(forces a 4-device host mesh if XLA_FLAGS is "
+                         "not already forcing one)")
+    ap.add_argument("--out", default=None,
+                    help="BENCH json path (default BENCH_des_sweep.json, "
+                         "or BENCH_des_sharded.json with --sharded)")
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--n-tokens", type=int, default=256)
     ap.add_argument("--max-experts", type=int, default=2)
     args = ap.parse_args()
+    if args.sharded:
+        # Must be decided before jax initializes its backend: give the
+        # host platform 4 devices so the mesh genuinely shards.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=4").strip()
+        sweep = run_sharded_sweep(
+            k=args.k, n_tokens=args.n_tokens, d=args.max_experts,
+            reps=1 if args.quick else 3,
+            out_path=args.out or "BENCH_des_sharded.json")
+        if not sweep["bit_identical"]:
+            raise SystemExit("sharded sweep diverged from des_select_batch")
+        return
     sweep = run_sweep(k=args.k, n_tokens=args.n_tokens, d=args.max_experts,
-                      reps=1 if args.quick else 3, out_path=args.out)
+                      reps=1 if args.quick else 3,
+                      out_path=args.out or "BENCH_des_sweep.json")
     if not args.quick:
         run(sweep=sweep)  # node-count study reuses the sweep measurement
     if not sweep["bit_identical"]:  # exactness gates even --quick CI runs

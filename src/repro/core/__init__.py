@@ -1,8 +1,16 @@
-"""Paper core: DMoE protocol, DES expert selection, JESA scheduling.
+"""Paper core: DMoE protocol, DES expert selection, OFDMA assignment.
 
-Host-side exact algorithms (numpy): `des`, `subcarrier`, `jesa`.
-In-graph jit-able routing (jnp): `selection`.
-Physical models: `channel`, `energy`; QoS schedule: `gating`.
+Host-side exact algorithms (numpy): `des` (Algorithm 1, single + batched),
+`subcarrier` (P3 optimal assignment).
+Jax-traceable: `selection` (in-graph routing masks), `des_prework` (the
+batched solver's pre-work pipeline, shardable via `repro.schedulers.sharded`).
+Physical models: `channel`, `energy`; QoS schedule: `gating`; per-round
+accounting: `protocol`.
+
+Scheduling *policies* (JESA block-coordinate descent and the benchmark
+schemes) live in `repro.schedulers` behind the registry —
+`get_policy("jesa" | "sharded-des" | ...)`; `core.jesa` only keeps the
+deprecated free-function shims.
 """
 
 from repro.core.channel import (

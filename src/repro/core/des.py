@@ -1,4 +1,9 @@
-"""Dynamic Expert Selection — Algorithm 1 (paper §V), exact host-side solver.
+"""Dynamic Expert Selection — Algorithm 1 (paper §V), exact host-side
+solvers: per-instance (`des_select`), batched (`des_select_batch`: dedup +
+vectorized pre-work + frontier-parallel B&B), plus the brute-force test
+oracle.  The pre-work also exists as a jax-traceable pipeline in
+`repro.core.des_prework` (device-sharded by `repro.schedulers.sharded`);
+both front-ends are bit-identical to the solvers here.
 
 Solves P1(a) for one (source-expert i, hidden-state n):
 
@@ -54,6 +59,32 @@ def _sanitize(e: np.ndarray) -> np.ndarray:
     e = np.asarray(e, dtype=np.float64).copy()
     e[~np.isfinite(e)] = _BIG
     return np.minimum(e, _BIG)
+
+
+def _sanitize_batch(e_raw: np.ndarray) -> np.ndarray:
+    """Batched `_sanitize`: clamp non-finite costs to the `_BIG` sentinel.
+    Single source for the host batch solver AND the sharded front-end
+    (`repro.schedulers.sharded`); the jax replica is
+    `repro.core.des_prework.sanitize_costs`."""
+    return np.minimum(np.where(np.isfinite(e_raw), e_raw, _BIG), _BIG)
+
+
+def _batch_inputs(scores, costs, qos, force_include):
+    """Shared validation/broadcast prologue of `des_select_batch` and
+    `sharded_des_select_batch`: returns (t, e_raw, z, forced) with
+    t/e_raw (B, K) float64, z (B,) float64, forced (B, K) bool."""
+    t = np.atleast_2d(np.asarray(scores, dtype=np.float64))
+    e_raw = np.atleast_2d(np.asarray(costs, dtype=np.float64))
+    b, k = t.shape
+    if e_raw.shape != (b, k):
+        raise ValueError(f"costs shape {e_raw.shape} != scores {t.shape}")
+    z = np.broadcast_to(np.asarray(qos, dtype=np.float64), (b,)).copy()
+    forced = (np.zeros((b, k), dtype=bool) if force_include is None
+              else np.atleast_2d(np.asarray(force_include, dtype=bool)))
+    if forced.shape != (b, k):
+        raise ValueError(
+            f"force_include shape {forced.shape} != scores {t.shape}")
+    return t, e_raw, z, forced
 
 
 def lp_lower_bound(t: np.ndarray, e: np.ndarray, z: float) -> float:
@@ -298,17 +329,8 @@ def des_select_batch(
       force_include: optional (B, K) bool — per-instance must-select mask.
       deduplicate: solve only unique instances and scatter (default).
     """
-    t = np.atleast_2d(np.asarray(scores, dtype=np.float64))
-    e_raw = np.atleast_2d(np.asarray(costs, dtype=np.float64))
+    t, e_raw, z, forced = _batch_inputs(scores, costs, qos, force_include)
     b, k = t.shape
-    if e_raw.shape != (b, k):
-        raise ValueError(f"costs shape {e_raw.shape} != scores {t.shape}")
-    z = np.broadcast_to(np.asarray(qos, dtype=np.float64), (b,)).copy()
-    forced = (np.zeros((b, k), dtype=bool) if force_include is None
-              else np.atleast_2d(np.asarray(force_include, dtype=bool)))
-    if forced.shape != (b, k):
-        raise ValueError(
-            f"force_include shape {forced.shape} != scores {t.shape}")
     d = int(max_experts)
 
     if b == 0:
@@ -320,7 +342,7 @@ def des_select_batch(
         # Sanitized costs + the finite-mask fully determine the solver's
         # behaviour (+inf and a literal _BIG cost row must NOT collapse:
         # all-unreachable rows take the Remark-2 path with energy=+inf).
-        e_san = np.minimum(np.where(np.isfinite(e_raw), e_raw, _BIG), _BIG)
+        e_san = _sanitize_batch(e_raw)
         key = np.hstack([t, e_san, np.isfinite(e_raw).astype(np.float64),
                          z[:, None], forced.astype(np.float64)])
         uniq_idx, inverse = _dedup_rows(key)
@@ -333,7 +355,7 @@ def des_select_batch(
                 sub.feasible[inverse], sub.nodes_explored[inverse],
                 sub.nodes_pruned[inverse])
 
-    e = np.minimum(np.where(np.isfinite(e_raw), e_raw, _BIG), _BIG)
+    e = _sanitize_batch(e_raw)
 
     selected = np.zeros((b, k), dtype=bool)
     energy = np.zeros(b, dtype=np.float64)

@@ -281,6 +281,40 @@ def cache_specs(mesh: Mesh, cache_shape: Any, *, seq_on_model: bool = True,
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+# ----------------------------------------------------------------------
+# batched policy-evaluation mesh (sharded DES pre-work)
+# ----------------------------------------------------------------------
+# The scheduler-side batch of (B, K) DES instances is embarrassingly
+# parallel over B, so it shards over a dedicated 1-D "batch" axis spanning
+# every local device — independent of the model meshes above (the policy
+# batch is host data, not a model activation).  `repro.schedulers.sharded`
+# wraps the jitted pre-work in `shard_map` with these specs.
+
+BATCH_AXIS = "batch"
+
+
+def make_batch_mesh(devices=None) -> Mesh:
+    """1-D ("batch",) mesh over `devices` (default: all local devices).
+
+    Deliberately a function, not a module constant: querying devices at
+    import time would freeze XLA before launchers can set XLA_FLAGS
+    (e.g. --xla_force_host_platform_device_count=N for host testing).
+    """
+    if devices is None:
+        devices = jax.devices()
+    return Mesh(np.asarray(devices), (BATCH_AXIS,))
+
+
+def batch_row_spec(ndim: int) -> P:
+    """PartitionSpec sharding dim 0 (the instance batch) over "batch"."""
+    return P(BATCH_AXIS, *([None] * (ndim - 1)))
+
+
+def pad_to_devices(n: int, n_devices: int) -> int:
+    """Rows of padding needed so a length-n batch splits evenly."""
+    return (-n) % max(n_devices, 1)
+
+
 def named(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,

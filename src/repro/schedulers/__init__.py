@@ -6,8 +6,11 @@
     rs = policy.schedule(ScheduleContext(gate_scores=g, rates=r, qos=0.4))
     rs.alpha, rs.beta, rs.energy
 
-Registered policies (see base.py for the protocol, README for a guide):
+Registered policies (see base.py for the protocol, docs/policies.md for a
+step-by-step guide):
   jesa         — Algorithm 2 block-coordinate descent (exact DES alpha-step)
+  sharded-des  — JESA with the alpha-step device-sharded (jitted pre-work
+                 via shard_map; alias: "des-sharded")
   homogeneous  — JESA with a layer-independent QoS threshold H(z, D)
   topk         — Top-k selection + optimal subcarrier allocation
   lb           — LB(gamma0, D): DES with C3 dropped (per-link best subcarrier)
@@ -27,6 +30,7 @@ from repro.schedulers.base import (
 # Importing the policy modules populates the registry.
 from repro.schedulers import host as _host  # noqa: F401
 from repro.schedulers import graph as _graph  # noqa: F401
+from repro.schedulers import sharded as _sharded  # noqa: F401
 from repro.schedulers.host import (
     HomogeneousPolicy,
     JESAPolicy,
@@ -34,10 +38,12 @@ from repro.schedulers.host import (
     TopKPolicy,
 )
 from repro.schedulers.graph import DensePolicy, GreedyDESPolicy
+from repro.schedulers.sharded import ShardedDESPolicy, sharded_des_select_batch
 
 __all__ = [
     "RoundSchedule", "ScheduleContext", "SchedulerPolicy",
     "available_policies", "get_policy", "register_policy",
     "JESAPolicy", "HomogeneousPolicy", "TopKPolicy", "LowerBoundPolicy",
-    "GreedyDESPolicy", "DensePolicy",
+    "GreedyDESPolicy", "DensePolicy", "ShardedDESPolicy",
+    "sharded_des_select_batch",
 ]

@@ -45,21 +45,26 @@ def _allocate_beta(alpha: np.ndarray, ctx: ScheduleContext,
 
 
 def _des_sweep(gate_scores: np.ndarray, costs: np.ndarray, qos: float,
-               max_experts: int) -> tuple[np.ndarray, int]:
+               max_experts: int, *, solver=None) -> tuple[np.ndarray, int]:
     """Exact DES for every (source i, token n) at once; returns
-    (alpha, nodes).  All K*N instances go through one
-    `des_lib.des_select_batch` call (dedup + frontier-parallel B&B) —
-    bit-identical to the per-(i, n) `des_select` loop it replaced."""
+    (alpha, nodes).  All K*N instances go through one batched-solver call
+    (default `des_lib.des_select_batch`: dedup + frontier-parallel B&B) —
+    bit-identical to the per-(i, n) `des_select` loop it replaced.
+
+    `solver` swaps in a drop-in batched front-end with the same signature
+    and `DESBatchResult` contract (the device-sharded
+    `repro.schedulers.sharded.sharded_des_select_batch` is one)."""
+    if solver is None:
+        solver = des_lib.des_select_batch
     k, n_tok, n_exp = gate_scores.shape
     flat = np.asarray(gate_scores, dtype=np.float64).reshape(k * n_tok, n_exp)
     active = flat.sum(axis=1) > 0  # padding tokens are never scheduled
     cost_rows = np.repeat(np.asarray(costs, dtype=np.float64), n_tok, axis=0)
     if active.all():
-        res = des_lib.des_select_batch(flat, cost_rows, qos, max_experts)
+        res = solver(flat, cost_rows, qos, max_experts)
         alpha = res.selected.astype(np.int8)
     elif active.any():
-        res = des_lib.des_select_batch(
-            flat[active], cost_rows[active], qos, max_experts)
+        res = solver(flat[active], cost_rows[active], qos, max_experts)
         alpha = np.zeros((k * n_tok, n_exp), dtype=np.int8)
         alpha[active] = res.selected.astype(np.int8)
     else:
@@ -103,6 +108,13 @@ class JESAPolicy(SchedulerPolicy):
     def effective_qos(self, ctx: ScheduleContext) -> float:
         return ctx.qos if self.qos is None else self.qos
 
+    def _alpha_sweep(self, gate_scores: np.ndarray, costs: np.ndarray,
+                     qos: float, max_experts: int) -> tuple[np.ndarray, int]:
+        """The alpha-step solver — subclass hook so drop-in batched
+        front-ends (e.g. `ShardedDESPolicy`) can reroute the sweep
+        without touching the BCD loop."""
+        return _des_sweep(gate_scores, costs, qos, max_experts)
+
     def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
         k, n_tok, _ = ctx.gate_scores.shape
         m = ctx.num_subcarriers
@@ -123,7 +135,7 @@ class JESAPolicy(SchedulerPolicy):
             rates_kk = channel_lib.link_rates(ctx.rates, beta)
             costs = energy_lib.selection_costs(
                 rates_kk, beta, ctx.comp_coeff, ctx.s0, ctx.p0)
-            new_alpha, nodes = _des_sweep(
+            new_alpha, nodes = self._alpha_sweep(
                 ctx.gate_scores, costs, qos, ctx.max_experts)
             total_nodes += nodes
 

@@ -1,0 +1,254 @@
+"""Device-sharded batched policy evaluation — the multi-device front-end
+for the exact DES solver.
+
+`des_select_batch` (PR 2) batched the Algorithm-1 sweep on one process;
+this module shards that batch across devices.  The vectorized pre-work
+(sanitize -> Remark-2 feasibility screen -> ratio sort -> greedy incumbent
+seed -> root Eq. 11-12 LP bound, see `repro.core.des_prework`) runs as a
+single jitted `shard_map` over a 1-D "batch" mesh
+(`repro.distributed.sharding.make_batch_mesh`), with the (B, K) instance
+batch partitioned over devices:
+
+  * instances the root LP bound already proves solved by the greedy seed
+    ("easy") and Remark-2-infeasible instances are resolved entirely
+    in-graph — no per-instance numpy ever touches them;
+  * only the hard residual is gathered back to the host frontier-parallel
+    branch-and-bound (`des_select_batch`), which typically sees a small
+    fraction of the batch.
+
+`sharded_des_select_batch` is a drop-in for `des_select_batch` — same
+signature, same `DESBatchResult`, and *bit-identical* selections,
+energies, feasibility flags, and B&B node counts (the pre-work replicates
+numpy's float accumulation order exactly; asserted by
+tests/test_sharded.py on 1-device and forced multi-device meshes).
+
+`ShardedDESPolicy` ("sharded-des") exposes it through the policy
+registry: the JESA block-coordinate loop with its alpha-step routed
+through the sharded solver, usable by name from the simulator, the
+serving engine (in-graph greedy path), and the benchmarks
+(`python -m benchmarks.des_complexity --quick --sharded`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import des as des_lib
+from repro.schedulers.base import ScheduleContext, register_policy
+from repro.schedulers.graph import GreedyDESPolicy
+from repro.schedulers.host import JESAPolicy, _des_sweep
+
+_DEFAULT_MESH = None  # lazily built over all local devices
+
+
+def _default_mesh():
+    global _DEFAULT_MESH
+    if _DEFAULT_MESH is None:
+        from repro.distributed import sharding
+        _DEFAULT_MESH = sharding.make_batch_mesh()
+    return _DEFAULT_MESH
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_prework_fn(mesh, max_experts: int):
+    """Jitted shard_map'd pre-work for one (mesh, D) pair.
+
+    Traced under x64 so every comparison happens in float64, matching the
+    numpy solver bit-for-bit.  Callers must invoke the returned function
+    under `jax.experimental.enable_x64()` as well (same trace avals)."""
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import des_prework
+    from repro.distributed.sharding import BATCH_AXIS
+
+    row = P(BATCH_AXIS)
+    mat = P(BATCH_AXIS, None)
+    out_specs = {
+        "infeasible": row, "all_unreachable": row, "fallback_sel": mat,
+        "easy": row, "easy_sel": mat, "seed_energy": row, "root_bound": row,
+    }
+    fn = shard_map(
+        functools.partial(des_prework.prework, max_experts=max_experts),
+        mesh=mesh, in_specs=(mat, mat, row, mat), out_specs=out_specs)
+    return jax.jit(fn)
+
+
+def _run_prework(t, e_raw, z, forced, d, mesh) -> Dict[str, np.ndarray]:
+    """Pad the batch to the mesh size, run the jitted sharded pre-work,
+    trim the padding, and return host numpy arrays."""
+    from jax.experimental import enable_x64
+
+    from repro.distributed.sharding import pad_to_devices
+
+    b, k = t.shape
+    n_dev = int(np.prod(tuple(mesh.shape.values())))
+    pad = pad_to_devices(b, n_dev)
+    if pad:
+        t = np.vstack([t, np.zeros((pad, k))])
+        e_raw = np.vstack([e_raw, np.ones((pad, k))])
+        z = np.concatenate([z, np.zeros(pad)])
+        forced = np.vstack([forced, np.zeros((pad, k), dtype=bool)])
+    fn = _sharded_prework_fn(mesh, d)
+    with enable_x64():
+        out = fn(t, e_raw, z, forced)
+    return {key: np.asarray(val)[:b] for key, val in out.items()}
+
+
+def sharded_des_select_batch(
+    scores: np.ndarray,
+    costs: np.ndarray,
+    qos: np.ndarray | float,
+    max_experts: int,
+    *,
+    force_include: Optional[np.ndarray] = None,
+    deduplicate: bool = True,
+    mesh=None,
+    stats: Optional[dict] = None,
+) -> des_lib.DESBatchResult:
+    """Drop-in `des_select_batch` with device-sharded jitted pre-work.
+
+    Same contract as `repro.core.des.des_select_batch` (bit-identical
+    selections / energies / feasibility / node counts), plus:
+
+      mesh:  a 1-D ("batch",) `jax.sharding.Mesh` to shard over
+             (default: all local devices via `make_batch_mesh`).
+      stats: optional dict, filled with the resolution split
+             {n_devices, batch, easy, hard, infeasible, forced_rows} —
+             `easy` instances never touch host numpy per-instance code.
+    """
+    t, e_raw, z, forced = des_lib._batch_inputs(
+        scores, costs, qos, force_include)
+    b, k = t.shape
+    d = int(max_experts)
+
+    if b == 0:
+        zero = np.zeros(0, dtype=np.int64)
+        return des_lib.DESBatchResult(
+            np.zeros((0, k), dtype=bool), np.zeros(0),
+            np.zeros(0, dtype=bool), zero, zero)
+
+    if mesh is None:
+        mesh = _default_mesh()
+    pw = _run_prework(t, e_raw, z, forced, d, mesh)
+
+    e = des_lib._sanitize_batch(e_raw)
+    selected = np.zeros((b, k), dtype=bool)
+    energy = np.zeros(b, dtype=np.float64)
+    feasible = np.zeros(b, dtype=bool)
+    explored = np.zeros(b, dtype=np.int64)
+    pruned = np.zeros(b, dtype=np.int64)
+
+    infeasible = pw["infeasible"]
+    easy = pw["easy"]
+    has_forced = forced.any(axis=1)
+
+    # Remark-2-infeasible rows with forced experts: the rare forced-trim
+    # logic stays single-source via per-row `des_select` (exactly what
+    # `des_select_batch` does on this path).
+    forced_rows = np.flatnonzero(infeasible & has_forced)
+    for row in forced_rows:
+        res = des_lib.des_select(t[row], e_raw[row], float(z[row]), d,
+                                 force_include=forced[row])
+        selected[row], energy[row] = res.selected, res.energy
+
+    # Remark-2-infeasible, no forced experts: in-graph Top-D fallback.
+    rows = np.flatnonzero(infeasible & ~has_forced)
+    if rows.size:
+        sel = pw["fallback_sel"][rows]
+        selected[rows] = sel
+        energy[rows] = np.where(pw["all_unreachable"][rows], np.inf,
+                                des_lib._masked_row_sums(e[rows], sel))
+
+    # Easy rows: the greedy seed is optimal (root LP bound prunes the
+    # sequential solver's root node: 1 explored, 1 pruned) — resolved
+    # entirely in-graph, only the energy gather-sum runs on host.
+    rows = np.flatnonzero(easy)
+    if rows.size:
+        sel = pw["easy_sel"][rows]
+        selected[rows] = sel
+        energy[rows] = des_lib._masked_row_sums(e[rows], sel)
+        feasible[rows] = True
+        explored[rows] = 1
+        pruned[rows] = 1
+
+    # Hard residual: gather back to the host frontier-parallel B&B.
+    hard = ~infeasible & ~easy
+    hard_rows = np.flatnonzero(hard)
+    if hard_rows.size:
+        sub = des_lib.des_select_batch(
+            t[hard_rows], e_raw[hard_rows], z[hard_rows], d,
+            force_include=forced[hard_rows], deduplicate=deduplicate)
+        selected[hard_rows] = sub.selected
+        energy[hard_rows] = sub.energy
+        feasible[hard_rows] = sub.feasible
+        explored[hard_rows] = sub.nodes_explored
+        pruned[hard_rows] = sub.nodes_pruned
+
+    if stats is not None:
+        stats.update(
+            n_devices=int(np.prod(tuple(mesh.shape.values()))),
+            batch=int(b),
+            easy=int(easy.sum()),
+            hard=int(hard_rows.size),
+            infeasible=int(infeasible.sum()),
+            forced_rows=int(forced_rows.size),
+        )
+    return des_lib.DESBatchResult(selected, energy, feasible,
+                                  explored, pruned)
+
+
+@register_policy("sharded-des", aliases=("des-sharded",))
+class ShardedDESPolicy(JESAPolicy):
+    """JESA with the alpha-step routed through the device-sharded exact
+    solver — bit-identical schedules to `JESAPolicy`, pre-work sharded
+    over the mesh.
+
+    Host path (`schedule`): the Algorithm-2 BCD loop, every DES sweep a
+    `sharded_des_select_batch` call.  In-graph path (`route_mask`): the
+    greedy P1(b) relaxation (same mask as `GreedyDESPolicy`) — exact
+    precisely on the instances the sharded pipeline classifies easy.
+
+    `last_stats` accumulates the easy/hard resolution split across the
+    BCD iterations of the most recent `schedule` call.
+    """
+
+    def __init__(self, *, mesh=None, max_iters: int = 20,
+                 beta_method: str = "auto", qos: Optional[float] = None):
+        super().__init__(max_iters=max_iters, beta_method=beta_method,
+                         qos=qos)
+        self.mesh = mesh
+        self.last_stats: Dict[str, int] = {}
+
+    def _alpha_sweep(self, gate_scores, costs, qos, max_experts):
+        stats: Dict[str, int] = {}
+        solver = functools.partial(
+            sharded_des_select_batch, mesh=self.mesh, stats=stats)
+        alpha, nodes = _des_sweep(gate_scores, costs, qos, max_experts,
+                                  solver=solver)
+        for key, val in stats.items():
+            if key == "n_devices":
+                self.last_stats[key] = val
+            else:
+                self.last_stats[key] = self.last_stats.get(key, 0) + val
+        return alpha, nodes
+
+    def schedule(self, ctx: ScheduleContext):
+        self.last_stats = {}
+        return super().schedule(ctx)
+
+    # In-graph surface: delegate to the greedy P1(b) policy so the two
+    # DES routing paths can never diverge (single source of the mask).
+    _greedy = GreedyDESPolicy()
+
+    def route_mask(self, gates, *, qos=0.0, costs=None, top_k: int = 2,
+                   max_experts: int = 0):
+        return self._greedy.route_mask(gates, qos=qos, costs=costs,
+                                       top_k=top_k, max_experts=max_experts)
+
+    def in_graph_costs(self, num_experts: int):
+        return self._greedy.in_graph_costs(num_experts)

@@ -7,7 +7,8 @@ at most one query (§III-C step 1).  Per layer l (one protocol round):
 
   1. attention + gate at each source node (in-situ, real JAX compute);
   2. gate scores + CSI -> the scheduler ("server");
-  3. scheduler runs JESA / Top-k / homogeneous / LB -> (alpha, beta);
+  3. scheduler runs any registered policy -> (alpha, beta): JESA /
+     sharded-des / Top-k / homogeneous / LB / ... (`repro.schedulers`);
   4-5. hidden states "transmitted" i->j, FFN_j applied for selected j,
        results aggregated with Eq.-8 weights — computed exactly, with
        the energy meter charging Eq. (3)-(4) for the traffic;

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,14 +44,19 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 256, seed: int = 0,
-                 use_des_routing: Optional[bool] = None):
+                 use_des_routing: Optional[Union[bool, str]] = None):
         # Routing policy comes from the registry: cfg.moe.routing names
         # it; `use_des_routing=True` forces the paper's greedy DES policy
-        # by overriding the routing name the jitted model resolves.  The
-        # policy supplies its own in-graph cost vector (None for policies
-        # that route on gate scores alone).
+        # by overriding the routing name the jitted model resolves, and a
+        # string forces any registered in-graph-capable policy by name
+        # (e.g. "sharded-des" routes through the same greedy mask while
+        # its host `schedule()` path runs the device-sharded exact
+        # solver).  The policy supplies its own in-graph cost vector
+        # (None for policies that route on gate scores alone).
         if cfg.moe.num_experts and use_des_routing:
-            cfg = cfg.with_overrides(moe_routing="des-greedy")
+            routing = (use_des_routing if isinstance(use_des_routing, str)
+                       else "des-greedy")
+            cfg = cfg.with_overrides(moe_routing=routing)
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
