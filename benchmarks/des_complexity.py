@@ -9,6 +9,8 @@ CLI::
         [--out BENCH_des_sweep.json] [--k 8] [--n-tokens 256]
     PYTHONPATH=src python -m benchmarks.des_complexity --quick --sharded
         [--out BENCH_des_sharded.json]
+    PYTHONPATH=src python -m benchmarks.des_complexity --quick --async
+        [--multihost] [--out BENCH_des_async.json]
 
 writes a ``BENCH_des_sweep.json`` artifact recording per-layer and
 overall loop-vs-batch wall-clock so the perf trajectory of the batched
@@ -17,6 +19,14 @@ device-sharded front-end (`repro.schedulers.sharded`) against the host
 batch solver on a multi-device mesh (forcing a 4-device host platform
 when no accelerators are present), recording the in-graph easy/hard
 resolution split — the easy path never runs per-instance numpy.
+``--async`` benchmarks the pipelined tier
+(`repro.schedulers.async_des.AsyncDESPipeline`): all rounds of the
+hard-residual sweep are submitted up front so round r+1's jitted
+pre-work overlaps round r's host branch-and-bound; ``--multihost``
+additionally runs the sweep spread over two `jax.distributed` processes
+(`repro.distributed.multihost.multihost_des_select_batch`).  Both write
+into ``BENCH_des_async.json``; parity with the host solver hard-gates
+every mode, wall-clock is recorded but never asserted.
 """
 
 from __future__ import annotations
@@ -245,6 +255,213 @@ def run_sharded_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
     return summary
 
 
+def run_async_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
+                    qos_z: float = 1.0, gamma0: float = 0.7,
+                    num_layers: int = 3, reps: int = 3, seed: int = 7,
+                    depth: int = 2, verbose: bool = True) -> dict:
+    """Benchmark the async pipeline against the blocking sharded solver
+    on the hard-residual sweep.
+
+    The sync path solves the layers' rounds back to back through
+    `sharded_des_select_batch`; the async path submits every round to an
+    `AsyncDESPipeline` up front, so while the worker's branch-and-bound
+    chews on round r's hard residual, round r+1's jitted pre-work is
+    already running in-graph.  Per-round results are asserted
+    bit-identical to `des_select_batch`; the wall-clock delta is the
+    overlap won back.
+    """
+    from repro.distributed.sharding import make_batch_mesh
+    from repro.schedulers.async_des import AsyncDESPipeline
+    from repro.schedulers.sharded import sharded_des_select_batch
+
+    gates, costs = _alpha_step_instances(k, n_tokens, seed)
+    flat = gates.reshape(k * n_tokens, k)
+    cost_rows = np.repeat(costs, n_tokens, axis=0)
+    mesh = make_batch_mesh()
+    qoses = [qos_z * gamma0 ** layer for layer in range(1, num_layers + 1)]
+
+    # Warm the jit caches + assert parity for every round.
+    layers = []
+    identical = True
+    with AsyncDESPipeline(mesh=mesh, depth=depth) as pipe:
+        stats_list = [dict() for _ in qoses]
+        pending = [pipe.submit(flat, cost_rows, qos, d, stats=st)
+                   for qos, st in zip(qoses, stats_list)]
+        for i, (qos, p) in enumerate(zip(qoses, pending)):
+            res = p.result()
+            ref = des_lib.des_select_batch(flat, cost_rows, qos, d)
+            same = bool(
+                np.array_equal(res.selected, ref.selected)
+                and np.array_equal(res.energy, ref.energy)
+                and np.array_equal(res.feasible, ref.feasible)
+                and np.array_equal(res.nodes_explored, ref.nodes_explored)
+                and np.array_equal(res.nodes_pruned, ref.nodes_pruned))
+            identical &= same
+            layers.append({
+                "layer": i + 1,
+                "qos": round(qos, 6),
+                "easy_in_graph": stats_list[i].get("easy", 0),
+                "hard_host_residual": stats_list[i].get("hard", 0),
+                "bit_identical": same,
+            })
+
+        # Timed passes: sync sharded rounds vs pipelined rounds.
+        t_sync, t_async = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for qos in qoses:
+                sharded_des_select_batch(flat, cost_rows, qos, d, mesh=mesh)
+            t_sync.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            pending = [pipe.submit(flat, cost_rows, qos, d) for qos in qoses]
+            for p in pending:
+                p.result()
+            t_async.append(time.perf_counter() - t0)
+
+    hard_total = int(sum(r["hard_host_residual"] for r in layers))
+    summary = {
+        "k": k,
+        "n_tokens": n_tokens,
+        "max_experts": d,
+        "qos_schedule": {"z": qos_z, "gamma0": gamma0},
+        "reps": reps,
+        "depth": depth,
+        "n_devices": int(np.prod(tuple(mesh.shape.values()))),
+        "layers": layers,
+        "sharded_ms_total": round(min(t_sync) * 1e3, 3),
+        "async_ms_total": round(min(t_async) * 1e3, 3),
+        "speedup_vs_sharded": round(min(t_sync) / min(t_async), 3),
+        "overlap_active": bool(depth > 1 and hard_total > 0),
+        "hard_host_residual_total": hard_total,
+        "easy_in_graph_total": int(sum(r["easy_in_graph"] for r in layers)),
+        "bit_identical": identical,
+    }
+    if verbose:
+        print(f"{'layer':>6}{'qos':>8}{'easy':>7}{'hard':>7}{'identical':>10}")
+        for row in layers:
+            print(f"{row['layer']:>6}{row['qos']:>8.3f}"
+                  f"{row['easy_in_graph']:>7}{row['hard_host_residual']:>7}"
+                  f"{str(row['bit_identical']):>10}")
+        print(f"sync sharded rounds: {summary['sharded_ms_total']:.1f} ms, "
+              f"pipelined: {summary['async_ms_total']:.1f} ms "
+              f"({summary['speedup_vs_sharded']}x, overlap_active="
+              f"{summary['overlap_active']})")
+    return summary
+
+
+_MULTIHOST_WORKER = r"""
+import json, sys
+proc_id, port, k, n_tokens, d, num_layers, reps, seed = (
+    int(v) for v in sys.argv[1:9])
+qos_z, gamma0 = float(sys.argv[9]), float(sys.argv[10])
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=2"
+                           ).strip()
+import time
+import numpy as np
+from repro.distributed import multihost
+assert multihost.initialize(f"127.0.0.1:{port}", num_processes=2,
+                            process_id=proc_id)
+from benchmarks.des_complexity import _alpha_step_instances
+from repro.core import des as des_lib
+
+gates, costs = _alpha_step_instances(k, n_tokens, seed)
+flat = gates.reshape(k * n_tokens, k)
+cost_rows = np.repeat(costs, n_tokens, axis=0)
+layers, identical, totals = [], True, []
+for layer in range(1, num_layers + 1):
+    qos = qos_z * gamma0 ** layer
+    stats = {}
+    res = multihost.multihost_des_select_batch(
+        flat, cost_rows, qos, d, stats=stats)
+    ref = des_lib.des_select_batch(flat, cost_rows, qos, d)
+    same = bool(np.array_equal(res.selected, ref.selected)
+                and np.array_equal(res.energy, ref.energy)
+                and np.array_equal(res.feasible, ref.feasible)
+                and np.array_equal(res.nodes_explored, ref.nodes_explored)
+                and np.array_equal(res.nodes_pruned, ref.nodes_pruned))
+    identical &= same
+    t = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        multihost.multihost_des_select_batch(flat, cost_rows, qos, d)
+        t.append(time.perf_counter() - t0)
+    totals.append(min(t))
+    layers.append({"layer": layer, "qos": round(qos, 6),
+                   "multihost_ms": round(min(t) * 1e3, 3),
+                   "local_rows": stats["batch"],
+                   "hard_host_residual": stats.get("hard", 0),
+                   "n_processes": stats["n_processes"],
+                   "bit_identical": same})
+if proc_id == 0:
+    print("MULTIHOST_RESULT " + json.dumps({
+        "layers": layers,
+        "multihost_ms_total": round(sum(totals) * 1e3, 3),
+        "bit_identical": identical,
+    }), flush=True)
+"""
+
+
+def run_multihost_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
+                        qos_z: float = 1.0, gamma0: float = 0.7,
+                        num_layers: int = 3, reps: int = 1, seed: int = 7,
+                        verbose: bool = True) -> dict:
+    """Run the alpha-step sweep spread over two `jax.distributed`
+    processes (each with a forced 2-device host mesh) and report the
+    per-process split + parity.
+
+    Every process solves its contiguous half of the (K*N) instance batch
+    on its local device mesh; results are exchanged through the
+    coordination-service KV store — no cross-process XLA computations,
+    so this runs on the CPU-only CI container too.
+    """
+    import socket
+    import subprocess
+    import sys
+
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo, "src"), repo,
+                    env.get("PYTHONPATH", "")) if p)
+    argv = [str(v) for v in (k, n_tokens, d, num_layers, reps, seed,
+                             qos_z, gamma0)]
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _MULTIHOST_WORKER, str(pid), str(port)] + argv,
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=env, cwd=repo) for pid in (0, 1)]
+    try:
+        outs = [p.communicate(timeout=600) for p in procs]
+    finally:
+        # One worker dying before the KV barrier deadlocks its peer —
+        # never leave live processes behind on timeout/failure.
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.communicate()
+    for p, (out, err) in zip(procs, outs):
+        if p.returncode != 0:
+            raise RuntimeError(f"multihost worker failed:\n{out}\n{err}")
+    marker = next(line for line in outs[0][0].splitlines()
+                  if line.startswith("MULTIHOST_RESULT "))
+    result = json.loads(marker[len("MULTIHOST_RESULT "):])
+    result.update(k=k, n_tokens=n_tokens, max_experts=d, reps=reps,
+                  n_processes=2, local_devices_per_process=2)
+    if verbose:
+        for row in result["layers"]:
+            print(f"layer {row['layer']} qos {row['qos']:.3f}: "
+                  f"{row['multihost_ms']:.1f} ms across "
+                  f"{row['n_processes']} processes "
+                  f"({row['local_rows']} rows/process, "
+                  f"identical={row['bit_identical']})")
+        print(f"multihost total: {result['multihost_ms_total']:.1f} ms")
+    return result
+
+
 def run(verbose: bool = True, sweep: dict | None = None):
     rows = []
     rng = np.random.default_rng(3)
@@ -301,13 +518,50 @@ def main() -> None:
                     help="benchmark the device-sharded front-end instead "
                          "(forces a 4-device host mesh if XLA_FLAGS is "
                          "not already forcing one)")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="benchmark the pipelined async tier (submit all "
+                         "rounds up front; host B&B overlaps the next "
+                         "round's jitted pre-work)")
+    ap.add_argument("--multihost", action="store_true",
+                    help="also run the sweep spread over two "
+                         "jax.distributed processes (subprocess workers)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="async pipeline depth (in-flight rounds)")
     ap.add_argument("--out", default=None,
-                    help="BENCH json path (default BENCH_des_sweep.json, "
-                         "or BENCH_des_sharded.json with --sharded)")
+                    help="BENCH json path (default BENCH_des_sweep.json; "
+                         "BENCH_des_sharded.json with --sharded; "
+                         "BENCH_des_async.json with --async/--multihost)")
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--n-tokens", type=int, default=256)
     ap.add_argument("--max-experts", type=int, default=2)
     args = ap.parse_args()
+    if args.async_ or args.multihost:
+        # One combined "des_async" artifact covering the pipelined and
+        # the multi-process tier; the mesh choice must precede backend
+        # init, so force a 4-device host platform like --sharded does.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=4").strip()
+        reps = 1 if args.quick else 3
+        summary: dict = {"bench": "des_async"}
+        if args.async_:
+            summary["async"] = run_async_sweep(
+                k=args.k, n_tokens=args.n_tokens, d=args.max_experts,
+                reps=reps, depth=args.depth)
+        if args.multihost:
+            summary["multihost"] = run_multihost_sweep(
+                k=args.k, n_tokens=args.n_tokens, d=args.max_experts,
+                reps=reps)
+        out = args.out or "BENCH_des_async.json"
+        with open(out, "w") as fh:
+            json.dump(summary, fh, indent=2)
+        print(f"wrote {out}")
+        for key in ("async", "multihost"):
+            if key in summary and not summary[key]["bit_identical"]:
+                raise SystemExit(
+                    f"{key} sweep diverged from des_select_batch")
+        return
     if args.sharded:
         # Must be decided before jax initializes its backend: give the
         # host platform 4 devices so the mesh genuinely shards.

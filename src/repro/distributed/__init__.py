@@ -7,6 +7,7 @@ from repro.distributed.sharding import (
     named,
     PARAM_RULES,
 )
+from repro.distributed import multihost
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "named",
-           "PARAM_RULES"]
+           "PARAM_RULES", "multihost"]

@@ -7,15 +7,19 @@
     rs.alpha, rs.beta, rs.energy
 
 Registered policies (see base.py for the protocol, docs/policies.md for a
-step-by-step guide):
-  jesa         — Algorithm 2 block-coordinate descent (exact DES alpha-step)
-  sharded-des  — JESA with the alpha-step device-sharded (jitted pre-work
-                 via shard_map; alias: "des-sharded")
-  homogeneous  — JESA with a layer-independent QoS threshold H(z, D)
-  topk         — Top-k selection + optimal subcarrier allocation
-  lb           — LB(gamma0, D): DES with C3 dropped (per-link best subcarrier)
-  des-greedy   — paper's P1(b) greedy relaxation; jit-able (alias: "des")
-  dense        — all experts (debug upper bound); jit-able
+step-by-step guide, docs/scaling.md for the sharded/async/multihost tiers):
+  jesa          — Algorithm 2 block-coordinate descent (exact DES alpha-step)
+  sharded-des   — JESA with the alpha-step device-sharded (jitted pre-work
+                  via shard_map; alias: "des-sharded")
+  async-des     — sharded-des with pipelined rounds: host B&B overlapped
+                  with the next round's device pre-work (alias: "des-async")
+  multihost-des — sharded-des with the batch spread across processes
+                  (alias: "des-multihost"; local fallback single-process)
+  homogeneous   — JESA with a layer-independent QoS threshold H(z, D)
+  topk          — Top-k selection + optimal subcarrier allocation
+  lb            — LB(gamma0, D): DES with C3 dropped (per-link best subcarrier)
+  des-greedy    — paper's P1(b) greedy relaxation; jit-able (alias: "des")
+  dense         — all experts (debug upper bound); jit-able
 """
 
 from repro.schedulers.base import (
@@ -31,6 +35,7 @@ from repro.schedulers.base import (
 from repro.schedulers import host as _host  # noqa: F401
 from repro.schedulers import graph as _graph  # noqa: F401
 from repro.schedulers import sharded as _sharded  # noqa: F401
+from repro.schedulers import async_des as _async_des  # noqa: F401
 from repro.schedulers.host import (
     HomogeneousPolicy,
     JESAPolicy,
@@ -39,11 +44,18 @@ from repro.schedulers.host import (
 )
 from repro.schedulers.graph import DensePolicy, GreedyDESPolicy
 from repro.schedulers.sharded import ShardedDESPolicy, sharded_des_select_batch
+from repro.schedulers.async_des import (
+    AsyncDESPipeline,
+    AsyncShardedDESPolicy,
+    MultihostDESPolicy,
+    async_des_select_batch,
+)
 
 __all__ = [
     "RoundSchedule", "ScheduleContext", "SchedulerPolicy",
     "available_policies", "get_policy", "register_policy",
     "JESAPolicy", "HomogeneousPolicy", "TopKPolicy", "LowerBoundPolicy",
     "GreedyDESPolicy", "DensePolicy", "ShardedDESPolicy",
-    "sharded_des_select_batch",
+    "sharded_des_select_batch", "AsyncDESPipeline", "AsyncShardedDESPolicy",
+    "MultihostDESPolicy", "async_des_select_batch",
 ]

@@ -1,0 +1,279 @@
+"""Async DES pipeline — double-buffered scheduling rounds.
+
+`sharded_des_select_batch` is a blocking call: dispatch the jitted device
+pre-work, wait for it, then run the host branch-and-bound on the hard
+residual.  In a serving tier that solves a *stream* of rounds (one per
+layer, per BCD iteration, or per batch chunk) that serializes two
+resources that could run concurrently:
+
+  * the DEVICES, which execute the jitted pre-work (sanitize -> Remark-2
+    screen -> ratio sort -> greedy seed -> root Eq. 11-12 bound from
+    `repro.core.des_prework.prework`), and
+  * the HOST, whose frontier-parallel B&B chews on the hard residual.
+
+`AsyncDESPipeline` overlaps them with the submit/collect split of
+`repro.schedulers.sharded`: `submit` dispatches round r+1's device
+pre-work on the caller thread (jax dispatch is asynchronous) and hands
+round r's collect + host B&B to a single background worker.  While the
+worker branches-and-bounds layer L's hard residual, layer L+1's pre-work
+is already running in-graph.  Results stay *bit-identical* to
+`repro.core.des.des_select_batch` — the pipeline only reorders wall-clock,
+never arithmetic (asserted by tests/test_async_des.py under repeated
+thread schedules).
+
+Three consumers:
+
+  * `async_des_select_batch` — drop-in `des_select_batch` that splits one
+    batch into pipelined chunks (chunk r+1's pre-work overlaps chunk r's
+    B&B inside a single call);
+  * `AsyncShardedDESPolicy` ("async-des") — JESA with the alpha-step
+    routed through the pipeline, registered so the simulator, the
+    `ServingEngine`, and every benchmark can use it by name;
+  * `MultihostDESPolicy` ("multihost-des") — JESA with the alpha-step
+    spread across processes (`repro.distributed.multihost`), degrading
+    gracefully to the local sharded solver in single-process runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+import weakref
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import des as des_lib
+from repro.schedulers.base import register_policy
+from repro.schedulers.host import _des_sweep
+from repro.schedulers.sharded import (
+    ShardedDESPolicy,
+    collect_prework,
+    resolve_prework,
+    submit_prework,
+)
+
+
+class PendingRound:
+    """Future-like handle for one submitted DES round.
+
+    `result()` blocks until the background collect + branch-and-bound
+    finishes and returns the round's `repro.core.des.DESBatchResult`;
+    exceptions raised by the worker (bad inputs, a failing solver) are
+    re-raised here, on the caller's thread, not swallowed.
+    """
+
+    def __init__(self, future: Future, batch: int):
+        self._future = future
+        self.batch = batch
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: Optional[float] = None
+               ) -> des_lib.DESBatchResult:
+        return self._future.result(timeout)
+
+
+class AsyncDESPipeline:
+    """Double-buffered DES rounds: device pre-work vs host B&B overlap.
+
+    depth: maximum in-flight rounds (2 = classic double buffering).
+    `submit` blocks once `depth` rounds are pending — backpressure, so an
+    unbounded producer cannot queue unbounded device work.  A single
+    worker thread finishes rounds strictly in submission order, which
+    keeps per-round results deterministic regardless of thread timing.
+
+    Use as a context manager (or call `close()`) to join the worker;
+    an unclosed pipeline's idle worker exits with the interpreter.
+    """
+
+    def __init__(self, *, mesh=None, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.mesh = mesh
+        self.depth = depth
+        self._slots = threading.BoundedSemaphore(depth)
+        self._worker = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="des-bnb")
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    def submit(self, scores, costs, qos, max_experts, *,
+               force_include=None, deduplicate: bool = True,
+               stats: Optional[dict] = None) -> PendingRound:
+        """Dispatch one round's device pre-work now (non-blocking) and
+        queue its host finish behind the rounds already in flight."""
+        if self._closed:
+            raise RuntimeError("pipeline is closed")
+        self._slots.acquire()
+        try:
+            handle = submit_prework(scores, costs, qos, max_experts,
+                                    force_include=force_include,
+                                    mesh=self.mesh)
+            future = self._worker.submit(
+                self._finish, handle, deduplicate, stats)
+        except BaseException:
+            self._slots.release()
+            raise
+        return PendingRound(future, handle.batch)
+
+    def _finish(self, handle, deduplicate, stats):
+        try:
+            return resolve_prework(handle, collect_prework(handle),
+                                   deduplicate=deduplicate, stats=stats)
+        finally:
+            self._slots.release()
+
+    # ------------------------------------------------------------------
+    def close(self, wait: bool = True) -> None:
+        self._closed = True
+        self._worker.shutdown(wait=wait)
+
+    def __enter__(self) -> "AsyncDESPipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _merge_stats(stats: Optional[dict], chunk_stats: List[dict]) -> None:
+    """Fold the per-chunk resolution splits into this call's totals and
+    write them into `stats` with the same overwrite-per-call semantics
+    as `sharded_des_select_batch` (drop-in contract: reusing one stats
+    dict across calls reports the last call, not a running sum)."""
+    if stats is None:
+        return
+    merged: dict = {}
+    for cs in chunk_stats:
+        for key, val in cs.items():
+            if key in ("n_devices", "n_processes"):
+                merged[key] = val
+            else:
+                merged[key] = merged.get(key, 0) + val
+    stats.update(merged)
+
+
+def async_des_select_batch(
+    scores: np.ndarray,
+    costs: np.ndarray,
+    qos: np.ndarray | float,
+    max_experts: int,
+    *,
+    force_include: Optional[np.ndarray] = None,
+    deduplicate: bool = True,
+    mesh=None,
+    stats: Optional[dict] = None,
+    rounds: int = 2,
+    pipeline: Optional[AsyncDESPipeline] = None,
+) -> des_lib.DESBatchResult:
+    """Drop-in `des_select_batch` that pipelines one batch as `rounds`
+    contiguous chunks: chunk r+1's jitted pre-work overlaps chunk r's
+    host branch-and-bound.  Bit-identical selections / energies /
+    feasibility / node counts (chunking never changes per-row results;
+    dedup simply operates within each chunk).
+
+    pipeline: reuse a caller-owned `AsyncDESPipeline` (keeps its worker
+    and backpressure across calls); otherwise a temporary one is built
+    around `mesh` and closed before returning.
+    """
+    t, e_raw, z, forced = des_lib._batch_inputs(
+        scores, costs, qos, force_include)
+    b, _ = t.shape
+    if b == 0 or rounds <= 1:
+        from repro.schedulers.sharded import sharded_des_select_batch
+        return sharded_des_select_batch(
+            t, e_raw, z, max_experts, force_include=forced,
+            deduplicate=deduplicate, mesh=mesh, stats=stats)
+
+    bounds = np.linspace(0, b, min(rounds, b) + 1).astype(int)
+    own = pipeline is None
+    pipe = pipeline or AsyncDESPipeline(mesh=mesh, depth=2)
+    try:
+        chunk_stats: List[dict] = []
+        pending: List[PendingRound] = []
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            cs: dict = {}
+            chunk_stats.append(cs)
+            pending.append(pipe.submit(
+                t[lo:hi], e_raw[lo:hi], z[lo:hi], max_experts,
+                force_include=forced[lo:hi], deduplicate=deduplicate,
+                stats=cs))
+        parts = [p.result() for p in pending]
+    finally:
+        if own:
+            pipe.close()
+    _merge_stats(stats, chunk_stats)
+    return des_lib.DESBatchResult(
+        np.concatenate([p.selected for p in parts]),
+        np.concatenate([p.energy for p in parts]),
+        np.concatenate([p.feasible for p in parts]),
+        np.concatenate([p.nodes_explored for p in parts]),
+        np.concatenate([p.nodes_pruned for p in parts]))
+
+
+@register_policy("async-des", aliases=("des-async",))
+class AsyncShardedDESPolicy(ShardedDESPolicy):
+    """JESA with the alpha-step pipelined through `AsyncDESPipeline` —
+    bit-identical schedules to `JESAPolicy` / `ShardedDESPolicy`, with
+    each sweep's chunks double-buffered so the host B&B of chunk r
+    overlaps the device pre-work of chunk r+1.
+
+    depth: in-flight rounds AND chunks per sweep (default 2).  The
+    pipeline (one worker thread) is created lazily and owned by the
+    policy; `close()` joins it.  `last_stats` accumulates the easy/hard
+    split exactly like the sharded policy.
+    """
+
+    def __init__(self, *, mesh=None, depth: int = 2, max_iters: int = 20,
+                 beta_method: str = "auto", qos: Optional[float] = None):
+        super().__init__(mesh=mesh, max_iters=max_iters,
+                         beta_method=beta_method, qos=qos)
+        self.depth = depth
+        self._pipeline: Optional[AsyncDESPipeline] = None
+
+    @property
+    def pipeline(self) -> AsyncDESPipeline:
+        if self._pipeline is None:
+            self._pipeline = AsyncDESPipeline(mesh=self.mesh,
+                                              depth=self.depth)
+            # Consumers that get the policy from the registry never call
+            # close(); reclaim the worker thread when the policy dies so
+            # long-lived servers can't accumulate idle executors.
+            weakref.finalize(self, AsyncDESPipeline.close,
+                             self._pipeline, False)
+        return self._pipeline
+
+    def _batch_solver(self, stats: Dict[str, int]):
+        return functools.partial(
+            async_des_select_batch, mesh=self.mesh, stats=stats,
+            rounds=self.depth, pipeline=self.pipeline)
+
+    def close(self) -> None:
+        """Join the pipeline worker (idempotent)."""
+        if self._pipeline is not None:
+            self._pipeline.close()
+            self._pipeline = None
+
+
+@register_policy("multihost-des", aliases=("des-multihost",))
+class MultihostDESPolicy(ShardedDESPolicy):
+    """JESA with the alpha-step spread across processes: each process
+    solves its contiguous slice of the instance batch on its local
+    device mesh and results are exchanged through the jax coordination
+    service (`repro.distributed.multihost.multihost_des_select_batch`).
+
+    In a single-process run (no `jax.distributed` runtime) this is
+    exactly `ShardedDESPolicy` — the multihost front-end falls through
+    to the local sharded solver, so the policy is safe to name anywhere.
+    All participating processes must issue the same schedule() calls in
+    the same order (SPMD-style), as each holds the full gate/CSI state.
+    """
+
+    def _batch_solver(self, stats: Dict[str, int]):
+        from repro.distributed import multihost
+
+        return functools.partial(
+            multihost.multihost_des_select_batch, mesh=self.mesh,
+            stats=stats)

@@ -27,12 +27,28 @@ registry: the JESA block-coordinate loop with its alpha-step routed
 through the sharded solver, usable by name from the simulator, the
 serving engine (in-graph greedy path), and the benchmarks
 (`python -m benchmarks.des_complexity --quick --sharded`).
+
+The solve is split into three phases so callers can overlap them:
+
+  * `submit_prework`  — dispatch the jitted device pre-work WITHOUT
+    blocking (jax's async dispatch returns device futures) and get a
+    `PreworkHandle` back;
+  * `collect_prework` — block on the device arrays and trim the padding;
+  * `resolve_prework` — the host-side finish: forced/fallback/easy rows
+    resolved from the pre-work outputs, hard residual through the host
+    branch-and-bound.
+
+`sharded_des_select_batch` is submit -> collect -> resolve in one call;
+the async pipeline (`repro.schedulers.async_des.AsyncDESPipeline`)
+dispatches submit on the caller thread and runs collect+resolve on a
+worker so round r+1's device pre-work overlaps round r's host B&B.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -78,63 +94,105 @@ def _sharded_prework_fn(mesh, max_experts: int):
     return jax.jit(fn)
 
 
-def _run_prework(t, e_raw, z, forced, d, mesh) -> Dict[str, np.ndarray]:
-    """Pad the batch to the mesh size, run the jitted sharded pre-work,
-    trim the padding, and return host numpy arrays."""
-    from jax.experimental import enable_x64
+@dataclasses.dataclass
+class PreworkHandle:
+    """One submitted (B, K) instance batch: the normalized host inputs
+    plus the in-flight device pre-work outputs (`out` holds jax arrays
+    that may still be computing — jax dispatch is asynchronous; `out` is
+    None for the empty batch)."""
 
-    from repro.distributed.sharding import pad_to_devices
+    t: np.ndarray                 # (B, K) float64 gate scores
+    e_raw: np.ndarray             # (B, K) float64 raw costs (inf allowed)
+    z: np.ndarray                 # (B,)  float64 QoS thresholds
+    forced: np.ndarray            # (B, K) bool must-select mask
+    max_experts: int
+    mesh: Any
+    out: Optional[Dict[str, Any]]  # device arrays, padded to the mesh
 
-    b, k = t.shape
-    n_dev = int(np.prod(tuple(mesh.shape.values())))
-    pad = pad_to_devices(b, n_dev)
-    if pad:
-        t = np.vstack([t, np.zeros((pad, k))])
-        e_raw = np.vstack([e_raw, np.ones((pad, k))])
-        z = np.concatenate([z, np.zeros(pad)])
-        forced = np.vstack([forced, np.zeros((pad, k), dtype=bool)])
-    fn = _sharded_prework_fn(mesh, d)
-    with enable_x64():
-        out = fn(t, e_raw, z, forced)
-    return {key: np.asarray(val)[:b] for key, val in out.items()}
+    @property
+    def batch(self) -> int:
+        return self.t.shape[0]
 
 
-def sharded_des_select_batch(
+def submit_prework(
     scores: np.ndarray,
     costs: np.ndarray,
     qos: np.ndarray | float,
     max_experts: int,
     *,
     force_include: Optional[np.ndarray] = None,
-    deduplicate: bool = True,
     mesh=None,
-    stats: Optional[dict] = None,
-) -> des_lib.DESBatchResult:
-    """Drop-in `des_select_batch` with device-sharded jitted pre-work.
+) -> PreworkHandle:
+    """Dispatch the sharded device pre-work for a batch without blocking.
 
-    Same contract as `repro.core.des.des_select_batch` (bit-identical
-    selections / energies / feasibility / node counts), plus:
-
-      mesh:  a 1-D ("batch",) `jax.sharding.Mesh` to shard over
-             (default: all local devices via `make_batch_mesh`).
-      stats: optional dict, filled with the resolution split
-             {n_devices, batch, easy, hard, infeasible, forced_rows} —
-             `easy` instances never touch host numpy per-instance code.
+    Pads the batch to the mesh size and invokes the jitted `shard_map`
+    pipeline; jax returns device futures immediately, so the caller can
+    keep doing host work (e.g. the previous round's branch-and-bound)
+    while the devices compute.  Pair with `collect_prework` +
+    `resolve_prework` (or let `sharded_des_select_batch` do all three).
     """
     t, e_raw, z, forced = des_lib._batch_inputs(
         scores, costs, qos, force_include)
     b, k = t.shape
     d = int(max_experts)
+    if mesh is None:
+        mesh = _default_mesh()
+    out = None
+    if b:
+        from jax.experimental import enable_x64
+
+        from repro.distributed.sharding import pad_to_devices
+
+        n_dev = int(np.prod(tuple(mesh.shape.values())))
+        pad = pad_to_devices(b, n_dev)
+        tp, ep, zp, fp = t, e_raw, z, forced
+        if pad:
+            tp = np.vstack([t, np.zeros((pad, k))])
+            ep = np.vstack([e_raw, np.ones((pad, k))])
+            zp = np.concatenate([z, np.zeros(pad)])
+            fp = np.vstack([forced, np.zeros((pad, k), dtype=bool)])
+        fn = _sharded_prework_fn(mesh, d)
+        with enable_x64():
+            out = fn(tp, ep, zp, fp)
+    return PreworkHandle(t, e_raw, z, forced, d, mesh, out)
+
+
+def collect_prework(handle: PreworkHandle) -> Dict[str, np.ndarray]:
+    """Block on a `submit_prework` dispatch and return host numpy arrays
+    trimmed back to the unpadded batch."""
+    if handle.out is None:
+        return {}
+    b = handle.batch
+    return {key: np.asarray(val)[:b] for key, val in handle.out.items()}
+
+
+def resolve_prework(
+    handle: PreworkHandle,
+    pw: Dict[str, np.ndarray],
+    *,
+    deduplicate: bool = True,
+    stats: Optional[dict] = None,
+) -> des_lib.DESBatchResult:
+    """Host-side finish of a collected pre-work round.
+
+    Resolves the Remark-2-infeasible and easy rows from the in-graph
+    outputs and sends only the hard residual through the host
+    frontier-parallel branch-and-bound — bit-identical to
+    `repro.core.des.des_select_batch` on the whole batch.
+    """
+    t, e_raw, z, forced = handle.t, handle.e_raw, handle.z, handle.forced
+    b, k = t.shape
+    d = handle.max_experts
 
     if b == 0:
+        if stats is not None:
+            stats.update(
+                n_devices=int(np.prod(tuple(handle.mesh.shape.values()))),
+                batch=0, easy=0, hard=0, infeasible=0, forced_rows=0)
         zero = np.zeros(0, dtype=np.int64)
         return des_lib.DESBatchResult(
             np.zeros((0, k), dtype=bool), np.zeros(0),
             np.zeros(0, dtype=bool), zero, zero)
-
-    if mesh is None:
-        mesh = _default_mesh()
-    pw = _run_prework(t, e_raw, z, forced, d, mesh)
 
     e = des_lib._sanitize_batch(e_raw)
     selected = np.zeros((b, k), dtype=bool)
@@ -191,7 +249,7 @@ def sharded_des_select_batch(
 
     if stats is not None:
         stats.update(
-            n_devices=int(np.prod(tuple(mesh.shape.values()))),
+            n_devices=int(np.prod(tuple(handle.mesh.shape.values()))),
             batch=int(b),
             easy=int(easy.sum()),
             hard=int(hard_rows.size),
@@ -200,6 +258,39 @@ def sharded_des_select_batch(
         )
     return des_lib.DESBatchResult(selected, energy, feasible,
                                   explored, pruned)
+
+
+def sharded_des_select_batch(
+    scores: np.ndarray,
+    costs: np.ndarray,
+    qos: np.ndarray | float,
+    max_experts: int,
+    *,
+    force_include: Optional[np.ndarray] = None,
+    deduplicate: bool = True,
+    mesh=None,
+    stats: Optional[dict] = None,
+) -> des_lib.DESBatchResult:
+    """Drop-in `des_select_batch` with device-sharded jitted pre-work.
+
+    Same contract as `repro.core.des.des_select_batch` (bit-identical
+    selections / energies / feasibility / node counts), plus:
+
+      mesh:  a 1-D ("batch",) `jax.sharding.Mesh` to shard over
+             (default: all local devices via `make_batch_mesh`).
+      stats: optional dict, filled with the resolution split
+             {n_devices, batch, easy, hard, infeasible, forced_rows} —
+             `easy` instances never touch host numpy per-instance code.
+
+    Equivalent to `submit_prework` -> `collect_prework` ->
+    `resolve_prework` back to back; use those directly (or
+    `repro.schedulers.async_des.AsyncDESPipeline`) to overlap the device
+    pre-work with host work.
+    """
+    handle = submit_prework(scores, costs, qos, max_experts,
+                            force_include=force_include, mesh=mesh)
+    return resolve_prework(handle, collect_prework(handle),
+                           deduplicate=deduplicate, stats=stats)
 
 
 @register_policy("sharded-des", aliases=("des-sharded",))
@@ -224,14 +315,19 @@ class ShardedDESPolicy(JESAPolicy):
         self.mesh = mesh
         self.last_stats: Dict[str, int] = {}
 
+    def _batch_solver(self, stats: Dict[str, int]):
+        """The drop-in `des_select_batch` front-end the sweep routes
+        through — subclass hook for the pipelined / multi-process tiers
+        (`repro.schedulers.async_des`)."""
+        return functools.partial(
+            sharded_des_select_batch, mesh=self.mesh, stats=stats)
+
     def _alpha_sweep(self, gate_scores, costs, qos, max_experts):
         stats: Dict[str, int] = {}
-        solver = functools.partial(
-            sharded_des_select_batch, mesh=self.mesh, stats=stats)
         alpha, nodes = _des_sweep(gate_scores, costs, qos, max_experts,
-                                  solver=solver)
+                                  solver=self._batch_solver(stats))
         for key, val in stats.items():
-            if key == "n_devices":
+            if key in ("n_devices", "n_processes"):
                 self.last_stats[key] = val
             else:
                 self.last_stats[key] = self.last_stats.get(key, 0) + val

@@ -17,6 +17,15 @@ at most one query (§III-C step 1).  Per layer l (one protocol round):
 The model math is exact (the simulator produces the same logits a
 centralized run with the same per-token expert masks would); what is
 simulated is the wireless channel + energy, not the transformer.
+
+Overlap-aware round loop: the expert FFN einsums are dense in the expert
+axis and independent of the selection alpha (alpha only weights the
+Eq.-8 combine), so with ``overlap=True`` (the default) they are
+dispatched *before* the host scheduler runs — jax's asynchronous
+dispatch overlaps the device FFN work of round l with the host
+branch-and-bound of round l (and, under the "async-des" policy, with its
+pipelined pre-work rounds).  Pure wall-clock reordering: logits, energy
+accounting, and schedules are unchanged bit for bit.
 """
 
 from __future__ import annotations
@@ -60,7 +69,7 @@ class DMoESimulator:
                  qos: Optional[QoSSchedule] = None,
                  channel_cfg: Optional[channel_lib.ChannelConfig] = None,
                  seed: int = 0, top_k: Optional[int] = None,
-                 count_backward: bool = True):
+                 count_backward: bool = True, overlap: bool = True):
         assert cfg.moe.num_experts >= 1 and cfg.arch_type == "moe"
         assert not cfg.mla, "simulator uses the plain GQA MoE block"
         self.cfg = cfg
@@ -80,11 +89,25 @@ class DMoESimulator:
         self.s0 = 8192.0
         self.top_k = top_k or cfg.moe.top_k
         self.count_backward = count_backward
+        # Dispatch the alpha-independent expert FFN einsums before the
+        # host scheduler each round (see module docstring); disable to
+        # serialize device and host work (e.g. for profiling them apart).
+        self.overlap = overlap
 
     # ------------------------------------------------------------------
     def _layer_params(self, layer: int):
         stack = self.params["stages"]["stage0"]
         return jax.tree.map(lambda a: a[layer], stack)
+
+    def _expert_ffn(self, h, p):
+        """Every expert's FFN output for every token: (K, N, E, d).
+
+        Dense in the expert axis and independent of alpha, so it can be
+        dispatched before the scheduler decides the selection."""
+        g1 = jnp.einsum("bsd,edf->bsef", h, p["ffn"]["w1"])
+        u1 = jnp.einsum("bsd,edf->bsef", h, p["ffn"]["wu"])
+        hh = jax.nn.silu(g1.astype(jnp.float32)).astype(h.dtype) * u1
+        return jnp.einsum("bsef,efd->bsed", hh, p["ffn"]["w2"])
 
     def _schedule(self, gates: np.ndarray, rates: np.ndarray, layer: int,
                   ) -> RoundSchedule:
@@ -129,11 +152,19 @@ class DMoESimulator:
             h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
             logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32),
                                 p["ffn"]["w_gate_router"])
-            gates = np.asarray(jax.nn.softmax(logits, axis=-1),
-                               dtype=np.float64)          # (K, N, E)
+            gates_dev = jax.nn.softmax(logits, axis=-1)   # (K, N, E)
 
             # -- step 3: joint expert & subcarrier allocation ----------
+            # The per-expert FFN outputs don't depend on alpha (selection
+            # only weights the Eq.-8 combine), so the overlap-aware loop
+            # dispatches them BEFORE blocking on the host scheduler: the
+            # device einsums run concurrently with the host B&B.
+            if self.overlap:
+                ye = self._expert_ffn(h, p)
+            gates = np.asarray(gates_dev, dtype=np.float64)
             rs = self._schedule(gates, rates, layer)
+            if not self.overlap:
+                ye = self._expert_ffn(h, p)
             alpha, beta = rs.alpha, rs.beta
             hist[layer] = alpha.sum(axis=(0, 1)) / max(alpha.sum(), 1)
 
@@ -141,10 +172,6 @@ class DMoESimulator:
             am = jnp.asarray(alpha, dtype=jnp.float32)    # (K, N, E)
             w = am * jnp.asarray(gates, dtype=jnp.float32)
             w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # Eq. 8
-            g1 = jnp.einsum("bsd,edf->bsef", h, p["ffn"]["w1"])
-            u1 = jnp.einsum("bsd,edf->bsef", h, p["ffn"]["wu"])
-            hh = jax.nn.silu(g1.astype(jnp.float32)).astype(h.dtype) * u1
-            ye = jnp.einsum("bsef,efd->bsed", hh, p["ffn"]["w2"])
             y = jnp.einsum("bsed,bse->bsd", ye.astype(jnp.float32),
                            w).astype(x.dtype)
             x = x + y

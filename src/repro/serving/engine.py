@@ -49,10 +49,11 @@ class ServingEngine:
         # it; `use_des_routing=True` forces the paper's greedy DES policy
         # by overriding the routing name the jitted model resolves, and a
         # string forces any registered in-graph-capable policy by name
-        # (e.g. "sharded-des" routes through the same greedy mask while
-        # its host `schedule()` path runs the device-sharded exact
-        # solver).  The policy supplies its own in-graph cost vector
-        # (None for policies that route on gate scores alone).
+        # (e.g. "sharded-des" or "async-des" route through the same
+        # greedy mask while their host `schedule()` paths run the
+        # device-sharded / pipelined exact solvers).  The policy supplies
+        # its own in-graph cost vector (None for policies that route on
+        # gate scores alone).
         if cfg.moe.num_experts and use_des_routing:
             routing = (use_des_routing if isinstance(use_des_routing, str)
                        else "des-greedy")
@@ -105,8 +106,12 @@ class ServingEngine:
         out = np.zeros((b, n_steps), dtype=np.int32)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         for s in range(n_steps):
-            out[:, s] = np.asarray(tok)
+            # Overlap-aware decode: dispatch the next step (which only
+            # needs the on-device token) BEFORE the host copy of the
+            # sampled token — jax's async dispatch overlaps the device
+            # step with the transfer.  Same tokens, reordered wall-clock.
             logits, caches = self._decode(self.params, tok, caches)
+            out[:, s] = np.asarray(tok)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             stats.decode_tokens += b
         dt = time.time() - t_start

@@ -13,8 +13,11 @@ ignored as prose):
 
 The CI `docs` job runs exactly this file, and the tier-1 suite includes
 it too.  It also enforces the paper-map coverage contract: every public
-function of `repro.core.des`, `repro.core.jesa`, and
-`repro.core.subcarrier` must appear in docs/paper_map.md.
+function (and class) of the core solver modules (`repro.core.des`,
+`repro.core.jesa`, `repro.core.subcarrier`, `repro.core.des_prework`)
+and of the scheduler-tier modules (`repro.schedulers.sharded`,
+`repro.schedulers.async_des`, `repro.distributed.multihost`) must appear
+in docs/paper_map.md.
 """
 
 from __future__ import annotations
@@ -99,10 +102,15 @@ def test_path_refs_resolve(doc, ref):
 
 
 @pytest.mark.parametrize("module", ["repro.core.des", "repro.core.jesa",
-                                    "repro.core.subcarrier"])
+                                    "repro.core.subcarrier",
+                                    "repro.core.des_prework",
+                                    "repro.schedulers.sharded",
+                                    "repro.schedulers.async_des",
+                                    "repro.distributed.multihost"])
 def test_paper_map_covers_public_functions(module):
     """Acceptance contract: docs/paper_map.md names every public function
-    (and public class) of the core solver modules, fully qualified."""
+    (and public class) of the core solver modules and the sharded /
+    async / multihost scheduler-tier modules, fully qualified."""
     text = (REPO / "docs" / "paper_map.md").read_text()
     mod = importlib.import_module(module)
     public = [

@@ -1,0 +1,83 @@
+"""Multi-process scheduler tier (`repro.distributed.multihost`):
+single-process semantics of the topology helpers, the batch partition,
+the KV allgather passthrough, and result (de)serialization.  The real
+2-process parity test (subprocess-driven `jax.distributed` runtime)
+lives in tests/test_sharded.py alongside the 4-device one."""
+
+import numpy as np
+import pytest
+
+from repro.core import des as des_lib
+from repro.distributed import multihost
+
+
+def test_single_process_topology():
+    """Without a jax.distributed runtime everything degrades to the
+    local single-process view."""
+    assert not multihost.is_initialized()
+    assert multihost.coordination_client() is None
+    assert multihost.process_count() == 1
+    assert multihost.process_index() == 0
+    # no coordinator known anywhere -> explicit no-op, not an error
+    assert multihost.initialize() is False
+
+
+def test_global_mesh_equals_local_single_process():
+    import jax
+
+    gmesh = multihost.make_global_batch_mesh()
+    lmesh = multihost.local_batch_mesh()
+    assert tuple(gmesh.shape.values()) == tuple(lmesh.shape.values())
+    assert gmesh.axis_names == ("batch",)
+    assert int(np.prod(tuple(gmesh.shape.values()))) == len(jax.devices())
+
+
+@pytest.mark.parametrize("n,count", [(10, 3), (7, 2), (3, 5), (0, 2),
+                                     (16, 4), (1, 1)])
+def test_process_slice_partitions(n, count):
+    """Slices cover [0, n) contiguously, disjointly, balanced to one."""
+    slices = [multihost.process_slice(n, count=count, index=i)
+              for i in range(count)]
+    covered = []
+    for sl in slices:
+        covered.extend(range(n)[sl])
+    assert covered == list(range(n))
+    sizes = [len(range(n)[sl]) for sl in slices]
+    assert max(sizes) - min(sizes) <= 1
+    with pytest.raises(ValueError):
+        multihost.process_slice(n, count=count, index=count)
+
+
+def test_kv_allgather_single_process_passthrough():
+    assert multihost.kv_allgather(b"payload") == [b"payload"]
+
+
+def test_result_roundtrip_serialization():
+    rng = np.random.default_rng(0)
+    t = rng.dirichlet(np.ones(6), size=9)
+    e = rng.uniform(0.01, 5.0, size=(9, 6))
+    e[0] = np.inf
+    res = des_lib.des_select_batch(t, e, 0.4, 2)
+    back = multihost._unpack_result(multihost._pack_result(res))
+    np.testing.assert_array_equal(back["selected"], res.selected)
+    np.testing.assert_array_equal(back["energy"], res.energy)
+    np.testing.assert_array_equal(back["feasible"], res.feasible)
+    np.testing.assert_array_equal(back["nodes_explored"], res.nodes_explored)
+    np.testing.assert_array_equal(back["nodes_pruned"], res.nodes_pruned)
+
+
+def test_multihost_front_end_single_process_parity():
+    """multihost_des_select_batch == des_select_batch when there is no
+    distributed runtime (the local sharded fallback)."""
+    rng = np.random.default_rng(4)
+    t = rng.dirichlet(np.ones(8), size=21)
+    e = rng.uniform(0.01, 5.0, size=(21, 8))
+    e[rng.random((21, 8)) < 0.15] = np.inf
+    qos = rng.uniform(0.1, 0.9, size=21)
+    stats: dict = {}
+    res = multihost.multihost_des_select_batch(t, e, qos, 2, stats=stats)
+    ref = des_lib.des_select_batch(t, e, qos, 2)
+    np.testing.assert_array_equal(res.selected, ref.selected)
+    np.testing.assert_array_equal(res.energy, ref.energy)
+    np.testing.assert_array_equal(res.nodes_explored, ref.nodes_explored)
+    assert stats["n_processes"] == 1 and stats["batch"] == 21

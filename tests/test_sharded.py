@@ -2,8 +2,11 @@
 equivalence of `sharded_des_select_batch` with `des_select_batch` and the
 per-row `des_select` (selections, energies, feasibility, node counts) on
 1-device and forced-4-device meshes, the all-easy and all-hard residual
-extremes, mesh padding, `force_include`, and the `ShardedDESPolicy`
-schedule parity against `JESAPolicy`."""
+extremes, mesh padding, `force_include`, the `ShardedDESPolicy` schedule
+parity against `JESAPolicy`, the submit/collect/resolve three-phase
+surface, and the 2-process `jax.distributed` parity of
+`multihost_des_select_batch` (subprocess-driven, like the 4-device
+mesh test)."""
 
 import subprocess
 import sys
@@ -214,3 +217,101 @@ def test_multi_device_parity():
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "multi-device parity OK" in proc.stdout
+
+
+def test_submit_collect_resolve_split():
+    """The three-phase surface equals the one-shot call: two rounds can
+    be in flight (submitted) before either is collected, and resolving
+    them in any order stays bit-identical to `des_select_batch`."""
+    from repro.schedulers.sharded import (
+        collect_prework,
+        resolve_prework,
+        submit_prework,
+    )
+
+    rng = np.random.default_rng(12)
+    k, d = 7, 2
+    batches = []
+    for b in (11, 6):
+        t = rng.dirichlet(np.ones(k), size=b)
+        e = rng.uniform(0.01, 5.0, size=(b, k))
+        e[rng.random((b, k)) < 0.2] = np.inf
+        batches.append((t, e, rng.uniform(0.1, 0.9, size=b)))
+    handles = [submit_prework(t, e, qos, d) for t, e, qos in batches]
+    assert [h.batch for h in handles] == [11, 6]
+    for handle, (t, e, qos) in reversed(list(zip(handles, batches))):
+        res = resolve_prework(handle, collect_prework(handle))
+        ref = des_lib.des_select_batch(t, e, qos, d)
+        np.testing.assert_array_equal(res.selected, ref.selected)
+        np.testing.assert_array_equal(res.energy, ref.energy)
+        np.testing.assert_array_equal(res.feasible, ref.feasible)
+        np.testing.assert_array_equal(res.nodes_explored, ref.nodes_explored)
+        np.testing.assert_array_equal(res.nodes_pruned, ref.nodes_pruned)
+
+
+_TWO_PROCESS_SCRIPT = r"""
+import sys
+proc_id, port = int(sys.argv[1]), int(sys.argv[2])
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=2"
+                           ).strip()
+import numpy as np
+from repro.distributed import multihost
+assert multihost.initialize(f"127.0.0.1:{port}", num_processes=2,
+                            process_id=proc_id)
+assert multihost.process_count() == 2
+assert multihost.process_index() == proc_id
+import jax
+gmesh = multihost.make_global_batch_mesh()
+assert int(np.prod(tuple(gmesh.shape.values()))) == 4  # 2 procs x 2 devs
+assert len(jax.local_devices()) == 2
+
+from repro.core import des as des_lib
+
+rng = np.random.default_rng(11)
+for b, k, d, qos in ((9, 8, 2, 0.45), (16, 6, 3, 0.3), (2, 5, 2, 0.9),
+                     (1, 4, 2, 0.5)):
+    t = rng.dirichlet(np.ones(k), size=b)
+    e = rng.uniform(0.01, 5.0, size=(b, k))
+    e[rng.random((b, k)) < 0.15] = np.inf
+    stats = {}
+    res = multihost.multihost_des_select_batch(t, e, qos, d, stats=stats)
+    ref = des_lib.des_select_batch(t, e, qos, d)
+    assert stats["n_processes"] == 2, stats
+    sl = multihost.process_slice(b)
+    assert stats["batch"] == len(range(b)[sl])
+    assert (res.selected == ref.selected).all()
+    assert ((res.energy == ref.energy) | (np.isinf(res.energy)
+            & np.isinf(ref.energy))).all()
+    assert (res.feasible == ref.feasible).all()
+    assert (res.nodes_explored == ref.nodes_explored).all()
+    assert (res.nodes_pruned == ref.nodes_pruned).all()
+print(proc_id, "two-process parity OK", flush=True)
+"""
+
+
+def test_two_process_parity():
+    """`multihost_des_select_batch` on a real 2-process jax.distributed
+    runtime (each process a 2-device host mesh): every process returns
+    the full batch, bit-identical to the single-process solver.  Runs as
+    two subprocesses — the runtime must come up before jax's backend
+    initializes."""
+    import os
+    import socket
+
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    cwd = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _TWO_PROCESS_SCRIPT, str(pid), str(port)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=env, cwd=cwd) for pid in (0, 1)]
+    outs = [p.communicate(timeout=300) for p in procs]
+    for pid, (p, (out, err)) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, f"process {pid}:\n{out}\n{err}"
+        assert "two-process parity OK" in out
