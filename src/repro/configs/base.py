@@ -191,6 +191,9 @@ ARCH_ALIASES = {
     # paper's own model
     "mixtral-8x7b": "mixtral_8x7b",
     "dmoe-paper": "mixtral_8x7b",
+    # ported external-baseline routing variants (routing_kwargs-tuned)
+    "mixtral-channel-aware": "mixtral_channel_aware",
+    "mixtral-siftmoe": "mixtral_siftmoe",
 }
 
 

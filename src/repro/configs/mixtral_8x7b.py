@@ -28,6 +28,16 @@ CONFIG = ModelConfig(
         top_k=2,
         d_ff_expert=14336,
         routing="des",
+        # Tuned greedy-DES variant: pin the C2 budget on the policy itself
+        # and steepen the in-graph cost vector (cross-node hops priced
+        # 1.5x, compute ramp matching the paper's a_j = j * 1e-3 shape).
+        # Resolved end-to-end via `configs.base.resolve_routing_policy`
+        # (engine cost vector) and `selection.route` (in-graph mask).
+        routing_kwargs=(
+            ("max_experts", 2),
+            ("inter_cost", 1.5),
+            ("comp_coeff_range", (0.125, 1.0)),
+        ),
         qos_z=1.0,
         qos_gamma0=0.7,
         max_experts=2,

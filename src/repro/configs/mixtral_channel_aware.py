@@ -1,0 +1,35 @@
+"""mixtral-channel-aware [moe] — the paper's DMoE deployment
+(mixtral-8x7b, K=8 edge devices) with the ported channel-aware gating
+baseline (arXiv 2504.00819) as the routing policy: gate logits fused
+with per-link CSI / cost features, Top-k over the fused gate.
+
+`routing_kwargs` tune the fusion: a sharpened softmax (temperature 0.8)
+and unit CSI weight — the settings `benchmarks/policy_zoo.py` sweeps
+around.  [hf:mistralai/Mixtral-8x7B-Instruct-v0.1]"""
+
+import dataclasses
+
+from repro.configs import mixtral_8x7b as _base
+
+CONFIG = dataclasses.replace(
+    _base.CONFIG,
+    name="mixtral-channel-aware",
+    moe=dataclasses.replace(
+        _base.CONFIG.moe,
+        routing="channel-aware",
+        routing_kwargs=(
+            ("csi_weight", 1.0),
+            ("temperature", 0.8),
+        ),
+    ),
+)
+
+
+def smoke():
+    cfg = _base.smoke()
+    return dataclasses.replace(
+        cfg,
+        name="mixtral-channel-aware-smoke",
+        moe=dataclasses.replace(cfg.moe, routing=CONFIG.moe.routing,
+                                routing_kwargs=CONFIG.moe.routing_kwargs),
+    )

@@ -1,0 +1,35 @@
+"""mixtral-siftmoe [moe] — the paper's DMoE deployment (mixtral-8x7b,
+K=8 edge devices) with the ported SiftMoE baseline (arXiv 2603.23888) as
+the routing policy: similarity-sifted, energy-priced cluster
+representatives + greedy QoS coverage.
+
+`routing_kwargs` tune the sift: similarity threshold 0.85 (slightly
+looser than the 0.9 default, so near-duplicate experts fold earlier) —
+the setting `benchmarks/policy_zoo.py` sweeps around.
+[hf:mistralai/Mixtral-8x7B-Instruct-v0.1]"""
+
+import dataclasses
+
+from repro.configs import mixtral_8x7b as _base
+
+CONFIG = dataclasses.replace(
+    _base.CONFIG,
+    name="mixtral-siftmoe",
+    moe=dataclasses.replace(
+        _base.CONFIG.moe,
+        routing="siftmoe",
+        routing_kwargs=(
+            ("similarity_threshold", 0.85),
+        ),
+    ),
+)
+
+
+def smoke():
+    cfg = _base.smoke()
+    return dataclasses.replace(
+        cfg,
+        name="mixtral-siftmoe-smoke",
+        moe=dataclasses.replace(cfg.moe, routing=CONFIG.moe.routing,
+                                routing_kwargs=CONFIG.moe.routing_kwargs),
+    )

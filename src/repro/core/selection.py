@@ -109,6 +109,7 @@ def route(
     qos: float | jnp.ndarray = 0.5,
     costs: Optional[jnp.ndarray] = None,
     max_experts: Optional[int] = None,
+    routing_kwargs: Optional[dict] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Unified router: returns (combine_weights, mask), both (..., K).
 
@@ -117,7 +118,11 @@ def route(
       "topk"       — standard Top-k (centralized-MoE baseline);
       "des"/"des-greedy" — greedy DES with per-expert costs + QoS
                      (paper's technique);
+      "channel-aware" / "siftmoe" — the ported external baselines;
       "dense"      — all experts (debug / upper bound).
+    `routing_kwargs` are constructor kwargs for the policy — the in-graph
+    leg of `MoEConfig.routing_kwargs` (policy construction happens at
+    trace time, so this stays jit-compatible).
     combine weights follow Eq. (8): renormalized gate mass over selection.
     """
     # Lazy import: schedulers.graph imports this module for the mask
@@ -131,7 +136,7 @@ def route(
     # weights below instead).
     gates_ng = jax.lax.stop_gradient(gates)
     try:
-        policy = get_policy(routing)
+        policy = get_policy(routing, **(routing_kwargs or {}))
     except KeyError as exc:
         raise ValueError(f"unknown routing {routing!r}") from exc
     mask = policy.route_mask(

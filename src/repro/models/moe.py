@@ -65,6 +65,7 @@ def _router(params, x, cfg: ModelConfig, layer_idx, expert_costs):
         qos=qos,
         costs=expert_costs,
         max_experts=m.max_experts or m.top_k,
+        routing_kwargs=dict(m.routing_kwargs),
     )
     gates = jax.nn.softmax(logits, axis=-1)
     # Switch-style load balance: E * sum_e (frac_tokens_e * mean_gate_e)

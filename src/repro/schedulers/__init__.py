@@ -7,7 +7,10 @@
     rs.alpha, rs.beta, rs.energy
 
 Registered policies (see base.py for the protocol, docs/policies.md for a
-step-by-step guide, docs/scaling.md for the sharded/async/multihost tiers):
+step-by-step guide, docs/baselines.md for per-policy selection rules and
+the cross-policy tradeoff benchmark, docs/scaling.md for the
+sharded/async/multihost tiers).  This list is drift-checked against the
+registry by tests/test_docs_refs.py::test_policy_lists_do_not_drift:
   jesa          — Algorithm 2 block-coordinate descent (exact DES alpha-step)
   sharded-des   — JESA with the alpha-step device-sharded (jitted pre-work
                   via shard_map; alias: "des-sharded")
@@ -20,6 +23,11 @@ step-by-step guide, docs/scaling.md for the sharded/async/multihost tiers):
   lb            — LB(gamma0, D): DES with C3 dropped (per-link best subcarrier)
   des-greedy    — paper's P1(b) greedy relaxation; jit-able (alias: "des")
   dense         — all experts (debug upper bound); jit-able
+  channel-aware — Top-k over gate logits fused with per-link CSI features
+                  (arXiv 2504.00819 port); jit-able (alias: "ca")
+  siftmoe       — similarity-sifted, energy-priced cluster representatives
+                  + greedy QoS coverage (arXiv 2603.23888 port); jit-able
+                  (alias: "sift")
 """
 
 from repro.schedulers.base import (
@@ -27,6 +35,7 @@ from repro.schedulers.base import (
     ScheduleContext,
     SchedulerPolicy,
     available_policies,
+    canonical_policy_name,
     get_policy,
     register_policy,
 )
@@ -36,6 +45,8 @@ from repro.schedulers import host as _host  # noqa: F401
 from repro.schedulers import graph as _graph  # noqa: F401
 from repro.schedulers import sharded as _sharded  # noqa: F401
 from repro.schedulers import async_des as _async_des  # noqa: F401
+from repro.schedulers import channel_aware as _channel_aware  # noqa: F401
+from repro.schedulers import siftmoe as _siftmoe  # noqa: F401
 from repro.schedulers.host import (
     HomogeneousPolicy,
     JESAPolicy,
@@ -50,12 +61,16 @@ from repro.schedulers.async_des import (
     MultihostDESPolicy,
     async_des_select_batch,
 )
+from repro.schedulers.channel_aware import ChannelAwarePolicy
+from repro.schedulers.siftmoe import SiftMoEPolicy
 
 __all__ = [
     "RoundSchedule", "ScheduleContext", "SchedulerPolicy",
-    "available_policies", "get_policy", "register_policy",
+    "available_policies", "canonical_policy_name", "get_policy",
+    "register_policy",
     "JESAPolicy", "HomogeneousPolicy", "TopKPolicy", "LowerBoundPolicy",
     "GreedyDESPolicy", "DensePolicy", "ShardedDESPolicy",
     "sharded_des_select_batch", "AsyncDESPipeline", "AsyncShardedDESPolicy",
     "MultihostDESPolicy", "async_des_select_batch",
+    "ChannelAwarePolicy", "SiftMoEPolicy",
 ]

@@ -191,15 +191,21 @@ def register_policy(name: str, *, aliases: Tuple[str, ...] = ()):
     return deco
 
 
-def get_policy(name: str, **kwargs: Any) -> SchedulerPolicy:
-    """Construct a registered policy by name (the single construction
-    path used by the simulator, the engine, and the benchmarks)."""
+def canonical_policy_name(name: str) -> str:
+    """Resolve an alias to its registered policy name (KeyError with the
+    available names if unknown)."""
     key = _ALIASES.get(name, name)
     if key not in _REGISTRY:
         raise KeyError(
             f"unknown scheduler policy {name!r}; "
             f"available: {sorted(_REGISTRY)} (+aliases {sorted(_ALIASES)})")
-    return _REGISTRY[key](**kwargs)
+    return key
+
+
+def get_policy(name: str, **kwargs: Any) -> SchedulerPolicy:
+    """Construct a registered policy by name (the single construction
+    path used by the simulator, the engine, and the benchmarks)."""
+    return _REGISTRY[canonical_policy_name(name)](**kwargs)
 
 
 def available_policies() -> Tuple[str, ...]:

@@ -1,0 +1,170 @@
+"""Channel-aware gating policy — port of Song et al., "Mixture-of-Experts
+for Distributed Edge Computing with Channel-Aware Gating Function"
+(arXiv 2504.00819) — as a first-class registry policy.
+
+The scheme makes the MoE gating function channel-aware: per-link channel
+state (the achievable SNR/rate toward each expert) is turned into a
+feature vector and FUSED with the semantic gating logits before the
+softmax, so experts behind bad links are de-emphasized *inside the gate*
+rather than filtered afterwards.  Selection is then plain Top-k over the
+fused gate — a heuristic (no QoS guarantee, no exactness), but cheap and
+fully jit-able.
+
+Port mapping onto this repo's stack:
+
+  * channel feature — ``csi_features`` standardizes the log of each
+    link's best per-subcarrier rate (``max_m r_ij^(m)``) per source row;
+    the in-situ expert (i == j, no transmission) gets the row's best
+    feature so local compute is never channel-penalized;
+  * fusion + selection — ``channel_aware_mask``: softmax of
+    ``log g + w * csi`` at temperature ``T``, then Top-k
+    (`repro.core.selection.topk_mask`), one traceable expression;
+  * subcarrier allocation — reused unchanged from
+    `repro.core.subcarrier.allocate_subcarriers` via the shared
+    ``_allocate_beta`` beta-step (the policy only changes WHICH experts
+    are selected, not how the OFDMA assignment is solved);
+  * in-graph path — without CSI the per-expert cost vector
+    (`repro.core.selection.expert_comm_costs`) is the channel proxy:
+    costs are standardized and negated into pseudo-CSI features.
+
+Like the Top-k baseline this policy ignores C1 (``effective_qos`` is 0);
+C2 is enforced by capping k at the expert budget D.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.schedulers.base import (
+    RoundSchedule,
+    ScheduleContext,
+    SchedulerPolicy,
+    register_policy,
+)
+from repro.schedulers.host import _allocate_beta, _round_energy
+
+
+def csi_features(rates: np.ndarray) -> np.ndarray:
+    """Per-(source, expert) channel features from the CSI tensor.
+
+    Args:
+      rates: (K, K, M) per-subcarrier link rates r_ij^(m).
+
+    Returns (K, K): the log of each link's best subcarrier rate,
+    standardized per source row over the off-diagonal links (zero mean,
+    unit variance — the scale the fusion weight ``csi_weight`` is tuned
+    against).  The diagonal (in-situ, no transmission) is set to the
+    row's best off-diagonal feature.  All-dead rows (every link at zero
+    rate) degrade to all-zero features rather than raising.
+    """
+    best = np.asarray(rates, dtype=np.float64).max(axis=-1)  # (K, K)
+    k = best.shape[0]
+    if k < 2:
+        return np.zeros((k, k))
+    off = ~np.eye(k, dtype=bool)
+    logr = np.log(np.maximum(best, 1e-30))
+    vals = np.where(off, logr, np.nan)
+    mu = np.nanmean(vals, axis=1, keepdims=True)
+    sd = np.nanstd(vals, axis=1, keepdims=True)
+    feat = (logr - mu) / np.maximum(sd, 1e-9)
+    idx = np.arange(k)
+    feat[idx, idx] = np.nanmax(np.where(off, feat, np.nan), axis=1)
+    return feat
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def channel_aware_mask(gates, csi, k: int, *, csi_weight=1.0,
+                       temperature=1.0):
+    """Jit-able channel-aware gating: fuse, re-softmax, Top-k.
+
+    Args:
+      gates: (..., E) semantic gate scores (softmax output; >= 0).
+      csi: channel features, broadcastable to ``gates`` (e.g. (K, 1, E)
+        per-source features against (K, N, E) gates, or (E,) pseudo-CSI
+        from a cost vector).
+      k: experts to select per token (static).
+      csi_weight: fusion weight w on the channel feature.
+      temperature: softmax temperature T of the fused gate.
+
+    Returns (..., E) {0, 1} mask with exactly k ones per row.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import selection as sel_lib
+
+    fused = jnp.log(gates.astype(jnp.float32) + 1e-9) + csi_weight * csi
+    fused_gate = jax.nn.softmax(fused / jnp.maximum(temperature, 1e-6),
+                                axis=-1)
+    return sel_lib.topk_mask(fused_gate, k)
+
+
+@register_policy("channel-aware", aliases=("ca",))
+class ChannelAwarePolicy(SchedulerPolicy):
+    """Channel-aware gating (arXiv 2504.00819): Top-k over gate logits
+    fused with per-link channel features; OFDMA beta-step unchanged."""
+
+    def __init__(self, *, csi_weight: float = 1.0, temperature: float = 1.0,
+                 top_k: Optional[int] = None, beta_method: str = "auto",
+                 inter_cost: float = 1.0,
+                 comp_coeff_range: tuple = (0.1, 1.0)):
+        self.csi_weight = csi_weight
+        self.temperature = temperature
+        self.top_k = top_k  # None -> ctx.top_k / call-site top_k
+        self.beta_method = beta_method
+        # in-graph cost-vector knobs, same contract as GreedyDESPolicy
+        self.inter_cost = inter_cost
+        self.comp_coeff_range = tuple(comp_coeff_range)
+
+    def effective_qos(self, ctx: ScheduleContext) -> float:
+        return 0.0  # like Top-k: the fused gate replaces C1, not meets it
+
+    def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
+        import jax.numpy as jnp
+
+        k_sel = min(self.top_k if self.top_k is not None else ctx.top_k,
+                    ctx.max_experts)  # C2 budget caps the fused Top-k
+        feat = csi_features(ctx.rates)  # (K, E): per-source features
+        mask = channel_aware_mask(
+            jnp.asarray(ctx.gate_scores, dtype=jnp.float32),
+            jnp.asarray(feat, dtype=jnp.float32)[:, None, :],
+            k_sel, csi_weight=self.csi_weight, temperature=self.temperature)
+        alpha = np.asarray(mask, dtype=np.int8)
+        alpha *= ctx.active_tokens()[..., None].astype(np.int8)
+
+        beta = _allocate_beta(alpha, ctx, self.beta_method)
+        obj = _round_energy(alpha, beta, ctx)
+        return RoundSchedule(
+            layer=ctx.layer, alpha=alpha, beta=beta, qos=0.0,
+            policy=self.name, energy=obj, energy_trace=[obj],
+            iterations=1, converged=True, des_nodes=0)
+
+    def route_mask(self, gates, *, qos=0.0, costs=None, top_k: int = 2,
+                   max_experts: int = 0):
+        import jax.numpy as jnp
+
+        d = max_experts or top_k
+        k_sel = min(self.top_k if self.top_k is not None else top_k, d)
+        if costs is None:
+            csi = jnp.zeros(gates.shape[-1:], dtype=jnp.float32)
+        else:
+            # Cost vector as pseudo-CSI: standardized and negated, so an
+            # expensive (far / congested) expert reads as a bad channel.
+            c = jnp.asarray(costs, dtype=jnp.float32)
+            c = jnp.minimum(jnp.where(jnp.isfinite(c), c, 1e15), 1e15)
+            mu = jnp.mean(c, axis=-1, keepdims=True)
+            sd = jnp.std(c, axis=-1, keepdims=True)
+            csi = -(c - mu) / jnp.maximum(sd, 1e-9)
+        return channel_aware_mask(
+            gates, csi, k_sel, csi_weight=self.csi_weight,
+            temperature=self.temperature)
+
+    def in_graph_costs(self, num_experts: int):
+        from repro.schedulers.graph import default_in_graph_costs
+
+        return default_in_graph_costs(
+            num_experts, inter_cost=self.inter_cost,
+            comp_coeff_range=self.comp_coeff_range)

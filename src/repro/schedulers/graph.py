@@ -29,6 +29,23 @@ from repro.schedulers.host import (
 )
 
 
+def default_in_graph_costs(num_experts: int, *, inter_cost: float = 1.0,
+                           comp_coeff_range: tuple = (0.1, 1.0)):
+    """The default per-expert cost vector for in-graph routing: the
+    cross-shard hop price plus a linear a_j compute-coefficient ramp
+    (`repro.core.selection.expert_comm_costs`).  Shared by every policy
+    that prices experts in-graph (des-greedy, channel-aware); the knobs
+    ride in via `MoEConfig.routing_kwargs`."""
+    import jax.numpy as jnp
+    from repro.core import selection as sel_lib
+
+    lo, hi = comp_coeff_range
+    return sel_lib.expert_comm_costs(
+        num_experts, max(num_experts // 4, 1),
+        inter_cost=inter_cost,
+        comp_coeff=jnp.linspace(lo, hi, num_experts))
+
+
 @register_policy("des-greedy", aliases=("des",))
 class GreedyDESPolicy(SchedulerPolicy):
     """Greedy DES (LP-relaxation rounding) — exact whenever the LP is
@@ -36,10 +53,17 @@ class GreedyDESPolicy(SchedulerPolicy):
     Top-D fallback), and fully traceable for in-graph routing."""
 
     def __init__(self, *, max_experts: Optional[int] = None,
-                 beta_method: str = "auto", qos: Optional[float] = None):
+                 beta_method: str = "auto", qos: Optional[float] = None,
+                 inter_cost: float = 1.0,
+                 comp_coeff_range: tuple = (0.1, 1.0)):
         self.max_experts = max_experts  # None -> call-site / ctx value
         self.beta_method = beta_method
         self.qos = qos  # None -> use ctx.qos (the layer schedule)
+        # In-graph cost-vector tuning (`in_graph_costs`): the cross-shard
+        # hop price and the synthetic a_j compute-coefficient ramp.
+        # `MoEConfig.routing_kwargs` is how configs tune these.
+        self.inter_cost = inter_cost
+        self.comp_coeff_range = tuple(comp_coeff_range)
 
     def effective_qos(self, ctx: ScheduleContext) -> float:
         return ctx.qos if self.qos is None else self.qos
@@ -86,12 +110,9 @@ class GreedyDESPolicy(SchedulerPolicy):
         return sel_lib.greedy_des_mask(gates, costs, qos, d)
 
     def in_graph_costs(self, num_experts: int):
-        import jax.numpy as jnp
-        from repro.core import selection as sel_lib
-
-        return sel_lib.expert_comm_costs(
-            num_experts, max(num_experts // 4, 1),
-            comp_coeff=jnp.linspace(0.1, 1.0, num_experts))
+        return default_in_graph_costs(
+            num_experts, inter_cost=self.inter_cost,
+            comp_coeff_range=self.comp_coeff_range)
 
 
 @register_policy("dense")

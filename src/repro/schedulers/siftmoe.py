@@ -1,0 +1,257 @@
+"""SiftMoE policy — port of "SiftMoE: Similarity-Aware Energy-Efficient
+Expert Selection for Wireless Distributed MoE Inference"
+(arXiv 2603.23888) — as a first-class registry policy.
+
+SiftMoE's observation: in a distributed MoE, experts whose gate-score
+*patterns* over the token population are highly similar are functionally
+redundant — transmitting hidden states to all of them buys little task
+relevance for a lot of wireless energy.  The scheme therefore (1) sifts
+the expert set down to cluster *representatives* using the similarity of
+the experts' gate-score vectors, preferring the energy-cheapest member
+of each similarity cluster, and (2) routes tokens only among the
+representatives, selecting just enough of them to cover the relevance
+(QoS) target.
+
+Port mapping onto this repo's stack (the clustering rule is the
+vectorizable "dominated-by-a-better-twin" form, identical on the host
+and in-graph paths):
+
+  * similarity — ``gate_similarity``: cosine similarity between the
+    experts' gate-score columns over the round's token population;
+  * energy pricing — the per-expert selection costs of
+    `repro.core.energy.selection_costs` (§V-A constants, computed under
+    the per-link best subcarrier like the greedy DES policy); an
+    expert's *priority* is gate-mass / price, so among near-duplicates
+    the cheap one represents the cluster;
+  * sifting — ``sift_representatives``: expert j is sifted out iff some
+    other expert j' has similarity >= threshold with j AND strictly
+    higher priority (index tie-break), i.e. a better twin exists;
+  * token routing — among representatives, each token greedily takes
+    experts by gate score until the QoS threshold is covered, capped at
+    the C2 budget D; tokens the representatives cannot cover fall back
+    to plain Top-D over ALL experts (the Remark-2 degradation — no
+    round ever raises, unreachable/inf-cost experts just lose priority);
+  * in-graph path — ``siftmoe_mask`` is the same pipeline as one
+    traceable jax expression (population statistics are computed over
+    the leading token axes of the batch);
+  * subcarrier allocation — reused unchanged from
+    `repro.core.subcarrier.allocate_subcarriers` via the shared
+    beta-step.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.core import des as des_lib
+from repro.core import energy as energy_lib
+from repro.schedulers.base import (
+    RoundSchedule,
+    ScheduleContext,
+    SchedulerPolicy,
+    register_policy,
+)
+from repro.schedulers.host import (
+    _allocate_beta,
+    _round_energy,
+    best_subcarrier_beta,
+)
+
+# Stand-in for +inf prices (unreachable experts): same sentinel the DES
+# solvers use, so priority math stays finite.
+_BIG = 1e15
+
+
+def gate_similarity(gates: np.ndarray) -> np.ndarray:
+    """Cosine similarity between expert gate-score vectors.
+
+    Args:
+      gates: (N, E) gate scores of one source's token population.
+
+    Returns (E, E) with sim[j, j'] in [0, 1] (gate scores are
+    nonnegative); experts that are never gated (all-zero columns) are
+    similar to nothing (zero row/column off the diagonal).
+    """
+    g = np.asarray(gates, dtype=np.float64)
+    norm = np.linalg.norm(g, axis=0)
+    unit = g / np.maximum(norm, 1e-12)[None, :]
+    sim = unit.T @ unit
+    np.fill_diagonal(sim, 1.0)
+    return sim
+
+
+def sift_representatives(sim: np.ndarray, mass: np.ndarray,
+                         prices: np.ndarray, threshold: float) -> np.ndarray:
+    """The sift: which experts represent their similarity cluster.
+
+    Expert j is sifted out iff a "better twin" exists: some j' != j with
+    sim[j, j'] >= threshold and strictly higher priority
+    mass / price (ties broken toward the lower index).  Non-finite
+    prices are clamped to a big sentinel, so unreachable experts are the
+    first to be sifted when a reachable twin exists.
+
+    Args:
+      sim: (E, E) similarity matrix (``gate_similarity``).
+      mass: (E,) population gate mass per expert.
+      prices: (E,) per-expert energy prices (may contain +inf).
+      threshold: similarity level at which two experts are twins.
+
+    Returns (E,) bool — True where the expert survives the sift.
+    """
+    e = sim.shape[0]
+    price = np.minimum(np.where(np.isfinite(prices), prices, _BIG), _BIG)
+    priority = np.asarray(mass, dtype=np.float64) / np.maximum(price, 1e-12)
+    idx = np.arange(e)
+    better = (priority[None, :] > priority[:, None]) | (
+        (priority[None, :] == priority[:, None]) & (idx[None, :] < idx[:, None]))
+    twins = (sim >= threshold) & (idx[None, :] != idx[:, None])
+    return ~(twins & better).any(axis=1)
+
+
+def _cover_tokens(gates: np.ndarray, reps: np.ndarray, qos: float,
+                  d: int) -> np.ndarray:
+    """Per-token greedy QoS coverage among the representatives.
+
+    gates: (N, E); reps: (E,) bool.  Each token takes representatives by
+    descending gate score until the selected ORIGINAL gate mass reaches
+    ``qos`` (at least one, at most ``d``); uncoverable tokens fall back
+    to Top-D over all experts (Remark-2 degradation).
+    """
+    n_tok, e = gates.shape
+    cand = np.where(reps[None, :], gates, 0.0)
+    order = np.argsort(-cand, axis=-1, kind="stable")
+    cum = np.cumsum(np.take_along_axis(cand, order, axis=-1), axis=-1)
+    n_take = np.clip(1 + (cum < qos).sum(axis=-1), 1, min(d, e))
+    ranks = np.argsort(order, axis=-1, kind="stable")
+    alpha = ((ranks < n_take[:, None]) & (cand > 0.0)).astype(np.int8)
+    covered = (alpha * gates).sum(axis=-1) >= qos - 1e-12
+    for n in np.nonzero(~covered)[0]:
+        alpha[n] = des_lib.top_d_fallback(
+            gates[n], np.zeros(e), d).astype(np.int8)
+    return alpha
+
+
+def siftmoe_mask(gates, costs, qos, max_experts: int, *,
+                 threshold: float = 0.9):
+    """Jit-able SiftMoE routing mask (the in-graph twin of the host path).
+
+    Args:
+      gates: (..., E) gate scores; all leading axes form the token
+        population the similarity statistics are computed over.
+      costs: (E,) per-expert energy prices, or None (uniform pricing).
+      qos: scalar relevance target (may be traced).
+      max_experts: D (static).
+      threshold: similarity level at which two experts are twins (static).
+
+    Returns (..., E) {0, 1} mask: per-token greedy QoS coverage among the
+    sifted representatives, Top-D fallback for uncoverable tokens.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import selection as sel_lib
+
+    e = gates.shape[-1]
+    d = min(int(max_experts), e)
+    g = gates.astype(jnp.float32)
+    flat = g.reshape(-1, e)
+
+    # --- the sift (population statistics over all leading axes) -------
+    norm = jnp.sqrt(jnp.sum(flat * flat, axis=0))
+    unit = flat / jnp.maximum(norm, 1e-12)[None, :]
+    sim = unit.T @ unit
+    mass = jnp.sum(flat, axis=0)
+    if costs is None:
+        price = jnp.ones((e,), dtype=jnp.float32)
+    else:
+        c = jnp.asarray(costs, dtype=jnp.float32)
+        price = jnp.minimum(jnp.where(jnp.isfinite(c), c, _BIG), _BIG)
+        price = jnp.broadcast_to(price, (e,))
+    priority = mass / jnp.maximum(price, 1e-12)
+    idx = jnp.arange(e)
+    better = (priority[None, :] > priority[:, None]) | (
+        (priority[None, :] == priority[:, None])
+        & (idx[None, :] < idx[:, None]))
+    twins = (sim >= threshold) & (idx[None, :] != idx[:, None])
+    reps = ~jnp.any(twins & better, axis=1)              # (E,)
+
+    # --- per-token greedy coverage among representatives --------------
+    qos = jnp.asarray(qos, dtype=jnp.float32)
+    cand = jnp.where(reps[None, :], flat, 0.0).reshape(g.shape)
+    order = jnp.argsort(-cand, axis=-1, stable=True)
+    cum = jnp.cumsum(jnp.take_along_axis(cand, order, axis=-1), axis=-1)
+    n_take = jnp.clip(1 + jnp.sum(cum < qos, axis=-1, keepdims=True), 1, d)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    take = (ranks < n_take) & (cand > 0.0)
+    covered = jnp.sum(take * g, axis=-1, keepdims=True) >= qos - 1e-7
+    fallback = sel_lib.topk_mask(g, d)
+    return jnp.where(covered, take, fallback).astype(gates.dtype)
+
+
+@register_policy("siftmoe", aliases=("sift",))
+class SiftMoEPolicy(SchedulerPolicy):
+    """SiftMoE (arXiv 2603.23888): similarity-sifted, energy-priced
+    cluster representatives + greedy QoS coverage; OFDMA beta-step
+    unchanged."""
+
+    def __init__(self, *, similarity_threshold: float = 0.9,
+                 max_experts: Optional[int] = None,
+                 qos: Optional[float] = None, beta_method: str = "auto",
+                 inter_cost: float = 1.0,
+                 comp_coeff_range: tuple = (0.1, 1.0)):
+        self.similarity_threshold = similarity_threshold
+        self.max_experts = max_experts  # None -> ctx.max_experts
+        self.qos = qos                  # None -> ctx.qos (layer schedule)
+        self.beta_method = beta_method
+        # in-graph cost-vector knobs, same contract as GreedyDESPolicy:
+        # without a cost vector the sift's energy pricing would be
+        # uniform (twins resolved by gate mass alone) on the jit path.
+        self.inter_cost = inter_cost
+        self.comp_coeff_range = tuple(comp_coeff_range)
+
+    def effective_qos(self, ctx: ScheduleContext) -> float:
+        return ctx.qos if self.qos is None else self.qos
+
+    def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
+        d = (self.max_experts if self.max_experts is not None
+             else ctx.max_experts)
+        qos = self.effective_qos(ctx)
+        # Energy pricing under the per-link best subcarrier (the
+        # beta-step then reallocates optimally for the realized traffic).
+        beta0 = best_subcarrier_beta(ctx.rates)
+        rates_kk = channel_lib.link_rates(ctx.rates, beta0)
+        prices = energy_lib.selection_costs(
+            rates_kk, beta0, ctx.comp_coeff, ctx.s0, ctx.p0)  # (K, E)
+
+        alpha = np.zeros(ctx.gate_scores.shape, dtype=np.int8)
+        for i in range(ctx.num_sources):
+            g = np.asarray(ctx.gate_scores[i], dtype=np.float64)
+            reps = sift_representatives(
+                gate_similarity(g), g.sum(axis=0), prices[i],
+                self.similarity_threshold)
+            alpha[i] = _cover_tokens(g, reps, qos, d)
+        alpha *= ctx.active_tokens()[..., None].astype(np.int8)
+
+        beta = _allocate_beta(alpha, ctx, self.beta_method)
+        obj = _round_energy(alpha, beta, ctx)
+        return RoundSchedule(
+            layer=ctx.layer, alpha=alpha, beta=beta, qos=qos,
+            policy=self.name, energy=obj, energy_trace=[obj],
+            iterations=1, converged=True, des_nodes=0)
+
+    def route_mask(self, gates, *, qos=0.0, costs=None, top_k: int = 2,
+                   max_experts: int = 0):
+        d = self.max_experts if self.max_experts is not None else (
+            max_experts or top_k)
+        q = self.qos if self.qos is not None else qos
+        return siftmoe_mask(gates, costs, q, d,
+                            threshold=self.similarity_threshold)
+
+    def in_graph_costs(self, num_experts: int):
+        from repro.schedulers.graph import default_in_graph_costs
+
+        return default_in_graph_costs(
+            num_experts, inter_cost=self.inter_cost,
+            comp_coeff_range=self.comp_coeff_range)

@@ -55,9 +55,24 @@ class ServingEngine:
         # its own in-graph cost vector (None for policies that route on
         # gate scores alone).
         if cfg.moe.num_experts and use_des_routing:
+            from repro.schedulers import canonical_policy_name
+
             routing = (use_des_routing if isinstance(use_des_routing, str)
                        else "des-greedy")
-            cfg = cfg.with_overrides(moe_routing=routing)
+            overrides = {"moe_routing": routing}
+            # routing_kwargs are constructor kwargs for the CONFIG's named
+            # policy — they don't transfer to a DIFFERENT policy, but an
+            # alias of the same one (e.g. "des" -> use_des_routing=True's
+            # "des-greedy") must keep its tuning.  An unregistered config
+            # name is simply being replaced: drop its kwargs too.
+            try:
+                same = (canonical_policy_name(routing)
+                        == canonical_policy_name(cfg.moe.routing))
+            except KeyError:
+                same = False
+            if not same:
+                overrides["moe_routing_kwargs"] = ()
+            cfg = cfg.with_overrides(**overrides)
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len

@@ -1,0 +1,363 @@
+"""Ported external baseline policies (channel-aware gating, SiftMoE):
+selection-rule semantics, degradation contracts, QoS overrides, the
+in-graph route_mask surfaces, config wiring through
+`MoEConfig.routing_kwargs`, and end-to-end smoke runs in the DMoE
+simulator and the serving engine (the registry's zero-consumer-change
+promise).  The shared C1/C2/C3 feasibility invariants run in
+tests/test_schedulers.py (both policies are in FEASIBILITY_POLICIES)."""
+
+import numpy as np
+import pytest
+
+from repro.core import channel as channel_lib
+from repro.core import energy as energy_lib
+from repro.core.gating import QoSSchedule
+from repro.schedulers import (
+    RoundSchedule,
+    ScheduleContext,
+    available_policies,
+    get_policy,
+)
+from repro.schedulers.channel_aware import channel_aware_mask, csi_features
+from repro.schedulers.siftmoe import (
+    gate_similarity,
+    sift_representatives,
+    siftmoe_mask,
+)
+
+QOS = 0.3
+D = 2
+
+
+def _instance(seed, k=5, m=40, n_tok=3):
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
+    rng = np.random.default_rng(seed)
+    gains = channel_lib.sample_channel_gains(ccfg, rng)
+    rates = channel_lib.subcarrier_rates(ccfg, gains)
+    g = rng.dirichlet(np.ones(k), size=(k, n_tok))
+    g[0, -1] = 0.0  # one padding token
+    return ccfg, rates, g
+
+
+def _ctx(ccfg, rates, g, seed, qos=QOS, d=D):
+    return ScheduleContext(
+        gate_scores=g, rates=rates, layer=1, qos=qos,
+        qos_schedule=QoSSchedule(z=1.0, gamma0=0.7, homogeneous_z=qos),
+        max_experts=d, top_k=d,
+        comp_coeff=energy_lib.make_comp_coeffs(g.shape[0]),
+        s0=8192.0, p0=ccfg.tx_power_w, rng=np.random.default_rng(seed))
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+def test_ported_baselines_registered_with_aliases():
+    avail = available_policies()
+    assert "channel-aware" in avail and "siftmoe" in avail
+    assert get_policy("ca").name == "channel-aware"
+    assert get_policy("sift").name == "siftmoe"
+
+
+# ----------------------------------------------------------------------
+# channel-aware gating semantics
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(3))
+def test_channel_aware_zero_weight_is_topk(seed):
+    """With the fusion weight at 0 the fused gate is the plain gate, so
+    selection must match the Top-k baseline bit for bit."""
+    ccfg, rates, g = _instance(seed)
+    ctx = _ctx(ccfg, rates, g, seed)
+    rs_ca = get_policy("channel-aware", csi_weight=0.0).schedule(ctx)
+    rs_topk = get_policy("topk").schedule(ctx)
+    np.testing.assert_array_equal(rs_ca.alpha, rs_topk.alpha)
+    assert rs_ca.energy == rs_topk.energy
+
+
+def test_channel_aware_steers_off_bad_links():
+    """An expert behind uniformly terrible links must be selected less
+    often than under channel-blind Top-k."""
+    k, m, n_tok = 4, 32, 16
+    rng = np.random.default_rng(0)
+    rates = np.full((k, k, m), 1e6)
+    rates += rng.uniform(0, 1e4, size=rates.shape)  # break feature ties
+    bad = 3
+    rates[:, bad, :] = 1.0  # every link toward expert `bad` is dead slow
+    idx = np.arange(k)
+    rates[idx, idx, :] = np.inf  # in-situ
+    g = rng.dirichlet(np.ones(k) * 8.0, size=(k, n_tok))  # near-uniform
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
+    ctx = _ctx(ccfg, rates, g, 0)
+    rs_ca = get_policy("channel-aware", csi_weight=4.0).schedule(ctx)
+    rs_topk = get_policy("topk").schedule(ctx)
+    src = idx != bad  # expert `bad`'s own node still computes in-situ
+    assert (rs_ca.alpha[src, :, bad].sum()
+            < rs_topk.alpha[src, :, bad].sum())
+
+
+def test_csi_features_standardized_and_in_situ_best():
+    _, rates, _ = _instance(0, k=5)
+    feat = csi_features(rates)
+    k = feat.shape[0]
+    off = ~np.eye(k, dtype=bool)
+    for i in range(k):
+        row = feat[i][off[i]]
+        assert abs(row.mean()) < 1e-9
+        assert feat[i, i] == pytest.approx(row.max())
+
+
+def test_channel_aware_all_dead_channel_degrades():
+    """All-unreachable CSI (every off-diagonal link at zero rate) must
+    not raise; the unserved traffic prices the round +inf."""
+    k, m = 4, 32
+    rates = np.zeros((k, k, m))
+    idx = np.arange(k)
+    rates[idx, idx, :] = np.inf
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
+    g = np.random.default_rng(0).dirichlet(np.ones(k), size=(k, 3))
+    rs = get_policy("channel-aware").schedule(_ctx(ccfg, rates, g, 0))
+    assert isinstance(rs, RoundSchedule)
+    assert (rs.alpha.sum(axis=-1) <= D).all()
+    if rs.alpha.sum(axis=1)[~np.eye(k, dtype=bool)].any():
+        assert rs.energy == np.inf  # zero-rate links priced honestly
+
+
+# ----------------------------------------------------------------------
+# siftmoe semantics
+# ----------------------------------------------------------------------
+
+def test_sift_prefers_cheap_twin():
+    """Two experts with identical gate columns are twins; the cheaper
+    one must represent the cluster."""
+    rng = np.random.default_rng(0)
+    g = rng.dirichlet(np.ones(4), size=(8,))
+    g[:, 1] = g[:, 0]  # expert 1 duplicates expert 0
+    g /= g.sum(axis=1, keepdims=True)
+    sim = gate_similarity(g)
+    assert sim[0, 1] == pytest.approx(1.0)
+    prices = np.array([2.0, 1.0, 1.0, 1.0])
+    reps = sift_representatives(sim, g.sum(0), prices, threshold=0.95)
+    assert not reps[0] and reps[1]  # expensive twin sifted out
+    # inf-priced twin always loses to a reachable one
+    reps = sift_representatives(
+        sim, g.sum(0), np.array([np.inf, 1.0, 1.0, 1.0]), threshold=0.95)
+    assert not reps[0] and reps[1]
+
+
+def test_siftmoe_schedule_drops_expensive_duplicate():
+    """End-to-end: a duplicated-column expert with a higher energy price
+    is never selected by the policy."""
+    k, m, n_tok = 4, 32, 8
+    rng = np.random.default_rng(1)
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
+    gains = channel_lib.sample_channel_gains(ccfg, rng)
+    rates = channel_lib.subcarrier_rates(ccfg, gains)
+    g = rng.dirichlet(np.ones(k), size=(k, n_tok))
+    g[..., 3] = g[..., 2]  # expert 3 duplicates expert 2 ...
+    g /= g.sum(axis=-1, keepdims=True)
+    # ... and a_j = j * 1e-3 prices expert 3 strictly higher everywhere
+    # the comm terms agree; make comm negligible so compute dominates.
+    ctx = _ctx(ccfg, rates, g, 1)
+    ctx.comp_coeff = ctx.comp_coeff * 1e6
+    rs = get_policy("siftmoe", similarity_threshold=0.95).schedule(ctx)
+    assert rs.alpha[..., 3].sum() == 0
+    assert rs.alpha[..., 2].sum() > 0
+
+
+def test_siftmoe_qos_override_parity_with_lb():
+    """Constructor QoS override routes through effective_qos, same as
+    every host policy (the des-greedy regression, applied to the port)."""
+    z = 0.55
+    ccfg, rates, g = _instance(0)
+    ctx = _ctx(ccfg, rates, g, 0, qos=0.05)
+    sift = get_policy("siftmoe", qos=z)
+    lb = get_policy("lb", qos=z)
+    assert sift.effective_qos(ctx) == lb.effective_qos(ctx) == z
+    rs = sift.schedule(ctx)
+    assert rs.qos == z
+    active = ctx.active_tokens()
+    for i in range(g.shape[0]):
+        for n in range(g.shape[1]):
+            if not active[i, n]:
+                continue
+            sel = rs.alpha[i, n].astype(bool)
+            assert (g[i, n][sel].sum() >= z - 1e-6
+                    or sel.sum() == D), (i, n)
+
+
+def test_siftmoe_all_unreachable_costs_degrade():
+    """Every off-diagonal link dead: prices are +inf off the diagonal,
+    the sift and the coverage must still return a schedule (no raise)."""
+    k, m = 4, 32
+    rates = np.zeros((k, k, m))
+    idx = np.arange(k)
+    rates[idx, idx, :] = np.inf
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
+    g = np.random.default_rng(0).dirichlet(np.ones(k), size=(k, 3))
+    rs = get_policy("siftmoe").schedule(_ctx(ccfg, rates, g, 0))
+    assert isinstance(rs, RoundSchedule)
+    assert (rs.alpha.sum(axis=-1) <= D).all()
+
+
+# ----------------------------------------------------------------------
+# in-graph surfaces
+# ----------------------------------------------------------------------
+
+def test_channel_aware_route_mask_surfaces():
+    import jax.numpy as jnp
+
+    from repro.core import selection as sel_lib
+
+    gates = jnp.asarray(
+        np.random.default_rng(0).dirichlet(np.ones(6), size=(4,)),
+        dtype=jnp.float32)
+    # no costs -> plain Top-k
+    m_ca = get_policy("channel-aware").route_mask(gates, top_k=2)
+    np.testing.assert_array_equal(np.asarray(m_ca),
+                                  np.asarray(sel_lib.topk_mask(gates, 2)))
+    # a huge cost on expert 0 reads as a dead channel -> never selected
+    costs = jnp.asarray([1e6, 1.0, 1.0, 1.0, 1.0, 1.0])
+    m_c = get_policy("channel-aware", csi_weight=4.0).route_mask(
+        gates, costs=costs, top_k=2)
+    assert np.asarray(m_c)[:, 0].sum() == 0
+    assert (np.asarray(m_c).sum(axis=-1) == 2).all()
+    # the fused mask is jit-able with broadcast CSI
+    m_j = channel_aware_mask(gates, jnp.zeros((6,)), 3)
+    assert (np.asarray(m_j).sum(axis=-1) == 3).all()
+
+
+def test_siftmoe_route_mask_surfaces():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    g = rng.dirichlet(np.ones(6), size=(8,))
+    g[:, 1] = g[:, 0]
+    g /= g.sum(axis=1, keepdims=True)
+    gates = jnp.asarray(g, dtype=jnp.float32)
+    costs = jnp.asarray([2.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    m = siftmoe_mask(gates, costs, 0.3, 2, threshold=0.95)
+    m = np.asarray(m)
+    assert m[:, 0].sum() == 0          # expensive twin never routed
+    assert (m.sum(axis=-1) <= 2).all()  # C2
+    # impossible QoS -> Top-D fallback, full budget used
+    m_fb = np.asarray(siftmoe_mask(gates, costs, 5.0, 2, threshold=0.95))
+    assert (m_fb.sum(axis=-1) == 2).all()
+    # registry surface
+    m_p = get_policy("siftmoe").route_mask(gates, qos=0.3, costs=costs,
+                                           top_k=2, max_experts=2)
+    assert (np.asarray(m_p).sum(axis=-1) <= 2).all()
+
+
+# ----------------------------------------------------------------------
+# routing_kwargs wiring (configs -> registry -> engine/in-graph)
+# ----------------------------------------------------------------------
+
+def test_routing_kwargs_reach_policies():
+    from repro.configs.base import get_config, resolve_routing_policy
+
+    pol = resolve_routing_policy(get_config("mixtral-8x7b"))
+    assert pol.name == "des-greedy"
+    assert pol.max_experts == 2 and pol.inter_cost == 1.5
+    ca = resolve_routing_policy(get_config("mixtral-channel-aware"))
+    assert ca.name == "channel-aware"
+    assert ca.csi_weight == 1.0 and ca.temperature == 0.8
+    sift = resolve_routing_policy(get_config("mixtral-siftmoe"))
+    assert sift.name == "siftmoe"
+    assert sift.similarity_threshold == 0.85
+
+
+def test_route_accepts_routing_kwargs():
+    import jax.numpy as jnp
+
+    from repro.core import selection as sel_lib
+
+    logits = jnp.asarray(
+        np.random.default_rng(0).standard_normal((3, 6)), jnp.float32)
+    combine, mask = sel_lib.route(
+        logits, routing="channel-aware", top_k=2, qos=0.0,
+        routing_kwargs={"csi_weight": 0.0, "top_k": 1})
+    assert (np.asarray(mask).sum(axis=-1) == 1).all()
+    np.testing.assert_allclose(np.asarray(combine).sum(-1), 1.0, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# end-to-end smoke: simulator + engine, zero consumer changes
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_cfg():
+    from repro.configs.base import get_smoke_config
+
+    c = get_smoke_config("mixtral-8x7b")
+    return c.with_overrides(num_layers=2, moe_num_experts=4)
+
+
+@pytest.mark.parametrize("scheme", ("channel-aware", "siftmoe"))
+def test_dmoe_sim_runs_ported_baseline(smoke_cfg, scheme):
+    from repro.serving import DMoESimulator
+
+    sim = DMoESimulator(smoke_cfg, scheme=scheme, seed=3)
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, smoke_cfg.vocab_size, size=(4, 5))
+    res = sim.serve(tokens)
+    assert res.logits.shape == (4, 5, smoke_cfg.vocab_size)
+    assert np.isfinite(res.logits).all()
+    d = smoke_cfg.moe.max_experts or smoke_cfg.moe.top_k
+    for acct in res.rounds:
+        assert acct.selected_per_token <= d + 1e-9
+
+
+@pytest.mark.parametrize("arch", ("mixtral-channel-aware", "mixtral-siftmoe"))
+def test_engine_runs_ported_baseline(arch):
+    from repro.configs.base import get_smoke_config
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_smoke_config(arch).with_overrides(num_layers=2,
+                                                moe_num_experts=4)
+    eng = ServingEngine(cfg, max_batch=2, max_len=32)
+    assert eng.policy.name == cfg.moe.routing
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=3)
+        for i in range(2)]
+    stats = eng.serve(reqs)
+    assert stats.decode_tokens == 2 * 3
+    assert all(r.output is not None and len(r.output) == 3 for r in reqs)
+
+
+def test_engine_override_keeps_kwargs_for_same_policy():
+    """use_des_routing=True forces "des-greedy", an alias of mixtral's
+    configured "des": the tuned routing_kwargs must survive.  Forcing a
+    genuinely different policy must drop them (they would be invalid
+    constructor kwargs for it)."""
+    from repro.configs.base import get_smoke_config
+    from repro.serving import ServingEngine
+
+    cfg = get_smoke_config("mixtral-8x7b")
+    same = ServingEngine(cfg, use_des_routing=True)
+    assert same.policy.name == "des-greedy"
+    assert same.policy.inter_cost == 1.5 and same.policy.max_experts == 2
+    other = ServingEngine(cfg, use_des_routing="siftmoe")
+    assert other.policy.name == "siftmoe"
+    assert other.cfg.moe.routing_kwargs == ()
+    # siftmoe prices experts in-graph too (the sift's energy leg)
+    assert other.expert_costs is not None
+    # an unregistered CONFIG routing is simply replaced, never resolved
+    weird = cfg.with_overrides(moe_routing="not-a-policy")
+    eng = ServingEngine(weird, use_des_routing=True)
+    assert eng.policy.name == "des-greedy"
+    assert eng.cfg.moe.routing_kwargs == ()
+
+
+def test_engine_use_des_routing_accepts_ported_baseline(smoke_cfg):
+    from repro.serving import Request, ServingEngine
+
+    eng = ServingEngine(smoke_cfg, max_batch=2, max_len=32,
+                        use_des_routing="siftmoe")
+    assert eng.policy.name == "siftmoe"
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=0, prompt=rng.integers(
+        0, smoke_cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=2)]
+    eng.serve(reqs)
+    assert reqs[0].output is not None

@@ -14,10 +14,14 @@ ignored as prose):
 The CI `docs` job runs exactly this file, and the tier-1 suite includes
 it too.  It also enforces the paper-map coverage contract: every public
 function (and class) of the core solver modules (`repro.core.des`,
-`repro.core.jesa`, `repro.core.subcarrier`, `repro.core.des_prework`)
-and of the scheduler-tier modules (`repro.schedulers.sharded`,
-`repro.schedulers.async_des`, `repro.distributed.multihost`) must appear
-in docs/paper_map.md.
+`repro.core.jesa`, `repro.core.subcarrier`, `repro.core.des_prework`),
+of the scheduler-tier modules (`repro.schedulers.sharded`,
+`repro.schedulers.async_des`, `repro.distributed.multihost`), and of the
+ported baseline policies (`repro.schedulers.channel_aware`,
+`repro.schedulers.siftmoe`) must appear in docs/paper_map.md — and the
+policy-list drift contract: every registered policy name must be
+mentioned in the `repro.schedulers` package docstring, listed in
+docs/policies.md, and carded in docs/baselines.md.
 """
 
 from __future__ import annotations
@@ -106,6 +110,8 @@ def test_path_refs_resolve(doc, ref):
                                     "repro.core.des_prework",
                                     "repro.schedulers.sharded",
                                     "repro.schedulers.async_des",
+                                    "repro.schedulers.channel_aware",
+                                    "repro.schedulers.siftmoe",
                                     "repro.distributed.multihost"])
 def test_paper_map_covers_public_functions(module):
     """Acceptance contract: docs/paper_map.md names every public function
@@ -123,3 +129,29 @@ def test_paper_map_covers_public_functions(module):
     missing = [f"{module}.{n}" for n in public
                if f"{module}.{n}" not in text]
     assert not missing, f"paper_map.md missing: {missing}"
+
+
+def test_policy_lists_do_not_drift():
+    """Registering a policy without documenting it is a test failure:
+    every `repro.schedulers.available_policies()` name must have a
+    `name — description` entry line in the package docstring, be listed
+    (backticked) in docs/policies.md, and have a `### \\`name\\`` card
+    section in docs/baselines.md.  (This is the regression guard for the
+    stale-policy-list drift the docstring and policies.md accumulated
+    before the baselines chapter existed.)"""
+    import repro.schedulers as schedulers
+
+    policies_md = (REPO / "docs" / "policies.md").read_text()
+    baselines_md = (REPO / "docs" / "baselines.md").read_text()
+    missing = []
+    for name in schedulers.available_policies():
+        # the docstring list-entry form ("  <name>   — ..."): a plain
+        # substring check would let e.g. "lb" hide inside "fallback"
+        entry = re.compile(rf"^\s+{re.escape(name)}\s+—", re.M)
+        if not entry.search(schedulers.__doc__):
+            missing.append(f"repro.schedulers docstring: {name}")
+        if f"`{name}`" not in policies_md:
+            missing.append(f"docs/policies.md: {name}")
+        if f"### `{name}`" not in baselines_md:
+            missing.append(f"docs/baselines.md section: {name}")
+    assert not missing, f"undocumented policies: {missing}"

@@ -22,7 +22,8 @@ from repro.schedulers import (
 
 QOS = 0.3
 D = 2
-FEASIBILITY_POLICIES = ("jesa", "topk", "homogeneous", "lb", "des-greedy")
+FEASIBILITY_POLICIES = ("jesa", "topk", "homogeneous", "lb", "des-greedy",
+                        "channel-aware", "siftmoe")
 
 
 def _instance(seed, k=5, m=40, n_tok=3):
@@ -160,7 +161,8 @@ def test_policy_energy_ordering(seed):
 # C3-infeasible traffic: no policy may raise mid-layer
 # ----------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", ("dense", "topk", "jesa", "des-greedy"))
+@pytest.mark.parametrize("name", ("dense", "topk", "jesa", "des-greedy",
+                                  "channel-aware", "siftmoe"))
 def test_c3_infeasible_traffic_never_raises(name):
     """Regression: heavy traffic (active links > M) used to crash
     `allocate_subcarriers` with a ValueError from inside every policy's
