@@ -59,6 +59,7 @@ def schedule_query(
     num_subcarriers: int = 64,
     seed: int = 0,
     homogeneous_z: float = 0.5,
+    policy_kwargs: Optional[Dict] = None,
 ) -> QueryResult:
     k = pool.num_experts
     rng = np.random.default_rng(seed)
@@ -75,7 +76,7 @@ def schedule_query(
     # Registry-constructed policy + per-layer ScheduleContext replace the
     # old per-scheme dispatch; scheme-specific knobs ride in via the
     # QoSSchedule / ctx fields.
-    policy = get_policy(scheme)
+    policy = get_policy(scheme, **(policy_kwargs or {}))
     sched = QoSSchedule(z=qos_z, gamma0=gamma0, homogeneous_z=homogeneous_z)
 
     per_comm, per_comp, per_q = [], [], []

@@ -81,7 +81,17 @@ def _knob_grid(policy: str, quick: bool):
         return "top_k", [(k, {"top_k": k, "max_experts": k})
                          for k in (1, 2, 3)]
     if policy == "siftmoe":
-        return "gamma0", [(g, {"gamma0": g}) for g in (0.5, 0.7, 0.9, 0.98)]
+        # both clustering variants at every gate-relevant point: the
+        # vectorized better-twin default AND the paper's original
+        # sequential leader clustering (they differ on similarity
+        # chains, so both belong under the dominance gate)
+        pts = []
+        for g in (0.5, 0.7, 0.9, 0.98):
+            pts.append((f"twin@{g}", {"gamma0": g}))
+            pts.append((f"seq@{g}", {
+                "gamma0": g,
+                "policy_kwargs": {"sift_method": "sequential"}}))
+        return "sift@gamma0", pts
     if policy == "des-greedy":
         gs = (0.8,) if quick else (0.5, 0.8, 0.95)
         return "gamma0", [(g, {"gamma0": g}) for g in gs]

@@ -1,0 +1,174 @@
+"""Serving-tier benchmark: every registered scheduler policy inside the
+traffic-driven continuous-batching front-end, swept across arrival
+rates.
+
+The scenario is the fig10 one (`repro.data.tasks.mixed_cost_pool`, K=8,
+3 domains) lifted from offline per-query scheduling into *serving*: a
+seeded workload of requests with Poisson arrivals, per-request token
+budgets and QoS classes (`repro.serving.workload`) is pushed through
+`repro.serving.frontend.ServingFrontend`, which runs the policy once
+per protocol round (layer) of every decode iteration, with per-round
+channel redraws.  Every policy at a given rate sees the IDENTICAL
+arrival trace (same workload seed), so the curves are paired.
+
+Swept rates bracket saturation: the lowest rate is arrival-limited
+(queues stay empty), the highest offers more tokens/s than the K-slot
+round pipeline can serve, so queueing delay and QoS violations dominate.
+
+Per (policy, rate) point: throughput (tokens / simulated makespan),
+scheduler throughput (tokens / host scheduling wall), p50/p90/p99
+latency, TTFT percentiles, QoS-violation rate (overall + per class),
+queue wait, comm/comp energy, per-round scheduler energy, B&B node
+counts, and the policy's own `last_stats` (e.g. the async-des pipeline
+counters) when exposed.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
+        [--out BENCH_serving.json] [--rates 0.5,2,8]
+
+writes ``BENCH_serving.json`` (the CI artifact) and exits non-zero if
+any policy fails to complete the workload at any rate.  ``--quick``
+trims layers and request count; the policy × rate coverage is identical
+in both modes (`tests/test_docs_refs.py` fails CI if a registered
+policy is missing from the committed artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.data.tasks import mixed_cost_pool
+from repro.schedulers import available_policies
+from repro.serving.frontend import FrontendConfig, serve_workload
+from repro.serving.workload import WorkloadConfig, generate_workload
+
+K = 8
+DOMAINS = (0, 1, 2)
+RATES_HZ = (0.5, 2.0, 8.0)
+WORKLOAD_SEED = 0
+
+
+def _scenario(quick: bool) -> dict:
+    return {
+        "pool": f"mixed_cost_pool(k={K})",
+        "num_layers": 4 if quick else 8,
+        "num_requests": 16 if quick else 48,
+        "arrival": "poisson",
+        "domains": list(DOMAINS),
+        "workload_seed": WORKLOAD_SEED,
+    }
+
+
+def _one_point(pool, policy: str, rate_hz: float, scn: dict) -> dict:
+    reqs = generate_workload(WorkloadConfig(
+        num_requests=scn["num_requests"], arrival=scn["arrival"],
+        rate_hz=rate_hz, domains=tuple(scn["domains"]),
+        seed=scn["workload_seed"]))
+    cfg = FrontendConfig(num_layers=scn["num_layers"])
+    t0 = time.perf_counter()
+    rep = serve_workload(policy, pool, reqs, cfg=cfg)
+    wall = time.perf_counter() - t0
+    j = rep.to_json()
+    rounds = max(rep.rounds, 1)
+    return {
+        "policy": policy,
+        "rate_hz": rate_hz,
+        "completed": rep.completed,
+        "num_requests": rep.num_requests,
+        "tokens_out": rep.tokens_out,
+        "rounds": rep.rounds,
+        "throughput_tok_s": j["throughput_tok_s"],
+        "sched_tok_s": j["sched_tok_s"],
+        "latency_s": j["latency_s"],
+        "ttft_s": j["ttft_s"],
+        "qos_violation_rate": j["qos_violation_rate"],
+        "qos_violations_by_class": j["qos_violations_by_class"],
+        "queue_wait_mean_s": j["queue_wait_mean_s"],
+        "comm_energy_j": j["comm_energy_j"],
+        "comp_energy_j": j["comp_energy_j"],
+        "sched_energy_per_round_j": round(
+            (rep.comm_energy_j + rep.comp_energy_j) / rounds, 9),
+        "des_nodes": rep.des_nodes,
+        "sched_wall_s": round(rep.sched_wall_s, 4),
+        "bench_wall_s": round(wall, 3),
+        "scheduler_stats": j.get("scheduler_stats") or {},
+    }
+
+
+def run_bench(quick: bool = False, rates=RATES_HZ,
+              out_path: str | None = None, verbose: bool = True) -> dict:
+    scn = _scenario(quick)
+    pool = mixed_cost_pool(k=K, num_domains=len(DOMAINS))
+    points = []
+    for policy in available_policies():
+        for rate in rates:
+            p = _one_point(pool, policy, rate, scn)
+            points.append(p)
+            if verbose:
+                print(f"{policy:>14} rate={rate:<4} "
+                      f"thr={p['throughput_tok_s']:6.3f} tok/s  "
+                      f"p50={p['latency_s']['p50']:6.2f}s "
+                      f"p99={p['latency_s']['p99']:6.2f}s  "
+                      f"viol={p['qos_violation_rate']:.3f}  "
+                      f"({p['bench_wall_s']:.2f}s)")
+
+    claims = {
+        "all_policies_swept": set(p["policy"] for p in points) == set(
+            available_policies()),
+        "all_requests_completed": all(
+            p["completed"] == p["num_requests"] for p in points),
+        # paired workloads: every policy emits the same token count at a
+        # given rate (budgets are workload-fixed, not policy-dependent)
+        "paired_token_counts": all(
+            len({p["tokens_out"] for p in points if p["rate_hz"] == r}) == 1
+            for r in rates),
+    }
+    summary = {
+        "bench": "serving",
+        "scenario": scn,
+        "quick": quick,
+        "rates_hz": list(rates),
+        "policies": list(available_policies()),
+        "points": points,
+        "claims": claims,
+    }
+    if verbose:
+        print("claims:", claims)
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(summary, fh, indent=2)
+        if verbose:
+            print(f"wrote {out_path}")
+    return summary
+
+
+def run(verbose: bool = True):
+    """benchmarks.run harness entry: (csv_rows, data, claims)."""
+    summary = run_bench(quick=True, verbose=verbose)
+    wall_us = sum(p["bench_wall_s"] for p in summary["points"]) * 1e6
+    csv = [("serving_bench", wall_us / max(len(summary["points"]), 1),
+            ";".join(f"{k}={v}" for k, v in summary["claims"].items()))]
+    return csv, summary, summary["claims"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="trim layers/request count (CI artifact mode)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--rates", default=None,
+                    help="comma-separated arrival rates in req/s")
+    args = ap.parse_args()
+    rates = (tuple(float(r) for r in args.rates.split(","))
+             if args.rates else RATES_HZ)
+    summary = run_bench(quick=args.quick, rates=rates, out_path=args.out)
+    bad = [name for name, ok in summary["claims"].items() if not ok]
+    if bad:
+        raise SystemExit(f"serving bench claims failed: {bad}")
+
+
+if __name__ == "__main__":
+    main()

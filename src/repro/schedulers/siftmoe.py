@@ -12,9 +12,14 @@ of each similarity cluster, and (2) routes tokens only among the
 representatives, selecting just enough of them to cover the relevance
 (QoS) target.
 
-Port mapping onto this repo's stack (the clustering rule is the
-vectorizable "dominated-by-a-better-twin" form, identical on the host
-and in-graph paths):
+Port mapping onto this repo's stack (the default clustering rule is the
+vectorizable "dominated-by-a-better-twin" form; the paper's original
+sequential leader clustering is available as ``sift_method=
+"sequential"`` — host loop + `lax.scan` in-graph.  The two agree unless
+similarity chains exist: with A~B, B~C but A!~C and priority A>B>C,
+better-twin keeps only A while sequential keeps A and C, because C's
+leader comparison is against the *surviving* leader A, not its sifted
+neighbor B):
 
   * similarity — ``gate_similarity``: cosine similarity between the
     experts' gate-score columns over the round's token population;
@@ -111,6 +116,35 @@ def sift_representatives(sim: np.ndarray, mass: np.ndarray,
     return ~(twins & better).any(axis=1)
 
 
+def sift_representatives_sequential(sim: np.ndarray, mass: np.ndarray,
+                                    prices: np.ndarray,
+                                    threshold: float) -> np.ndarray:
+    """The original SiftMoE sift: sequential leader clustering.
+
+    Experts are visited in descending priority (mass / price, ties
+    toward the lower index).  Each expert either joins the cluster of an
+    already-chosen leader it is similar to (sim >= threshold) — and is
+    sifted out — or becomes a new leader itself.
+
+    Differs from ``sift_representatives`` exactly on similarity CHAINS:
+    there an expert is sifted whenever ANY higher-priority twin exists
+    (even one that is itself sifted); here the comparison is only
+    against surviving leaders, so the tail of a chain survives when it
+    is dissimilar to the chain's head.
+
+    Args/returns: same contract as ``sift_representatives``.
+    """
+    e = sim.shape[0]
+    price = np.minimum(np.where(np.isfinite(prices), prices, _BIG), _BIG)
+    priority = np.asarray(mass, dtype=np.float64) / np.maximum(price, 1e-12)
+    order = np.argsort(-priority, kind="stable")
+    reps = np.zeros(e, dtype=bool)
+    for j in order:
+        if not (sim[j, reps] >= threshold).any():
+            reps[j] = True
+    return reps
+
+
 def _cover_tokens(gates: np.ndarray, reps: np.ndarray, qos: float,
                   d: int) -> np.ndarray:
     """Per-token greedy QoS coverage among the representatives.
@@ -135,7 +169,7 @@ def _cover_tokens(gates: np.ndarray, reps: np.ndarray, qos: float,
 
 
 def siftmoe_mask(gates, costs, qos, max_experts: int, *,
-                 threshold: float = 0.9):
+                 threshold: float = 0.9, method: str = "better-twin"):
     """Jit-able SiftMoE routing mask (the in-graph twin of the host path).
 
     Args:
@@ -145,14 +179,20 @@ def siftmoe_mask(gates, costs, qos, max_experts: int, *,
       qos: scalar relevance target (may be traced).
       max_experts: D (static).
       threshold: similarity level at which two experts are twins (static).
+      method: "better-twin" (vectorized sift) or "sequential" (the
+        paper's original leader clustering, a `lax.scan` over experts in
+        priority order; static).
 
     Returns (..., E) {0, 1} mask: per-token greedy QoS coverage among the
     sifted representatives, Top-D fallback for uncoverable tokens.
     """
     import jax.numpy as jnp
+    from jax import lax
 
     from repro.core import selection as sel_lib
 
+    if method not in ("better-twin", "sequential"):
+        raise ValueError(f"unknown sift method {method!r}")
     e = gates.shape[-1]
     d = min(int(max_experts), e)
     g = gates.astype(jnp.float32)
@@ -171,11 +211,28 @@ def siftmoe_mask(gates, costs, qos, max_experts: int, *,
         price = jnp.broadcast_to(price, (e,))
     priority = mass / jnp.maximum(price, 1e-12)
     idx = jnp.arange(e)
-    better = (priority[None, :] > priority[:, None]) | (
-        (priority[None, :] == priority[:, None])
-        & (idx[None, :] < idx[:, None]))
-    twins = (sim >= threshold) & (idx[None, :] != idx[:, None])
-    reps = ~jnp.any(twins & better, axis=1)              # (E,)
+    if method == "sequential":
+        # leader clustering as a scan over experts in priority order:
+        # the carry is the leader mask (in ordered space) — an expert
+        # joins (and is sifted) iff similar to an ALREADY-CHOSEN leader.
+        order = jnp.argsort(-priority, stable=True)
+        sim_ord = sim[order][:, order]
+
+        def _step(leaders, inp):
+            row, unit_row = inp
+            is_leader = ~jnp.any((row >= threshold) & leaders)
+            return jnp.where(unit_row, is_leader, leaders), None
+
+        leaders_ord, _ = lax.scan(
+            _step, jnp.zeros((e,), dtype=bool),
+            (sim_ord, jnp.eye(e, dtype=bool)))
+        reps = jnp.zeros((e,), dtype=bool).at[order].set(leaders_ord)
+    else:
+        better = (priority[None, :] > priority[:, None]) | (
+            (priority[None, :] == priority[:, None])
+            & (idx[None, :] < idx[:, None]))
+        twins = (sim >= threshold) & (idx[None, :] != idx[:, None])
+        reps = ~jnp.any(twins & better, axis=1)          # (E,)
 
     # --- per-token greedy coverage among representatives --------------
     qos = jnp.asarray(qos, dtype=jnp.float32)
@@ -197,11 +254,15 @@ class SiftMoEPolicy(SchedulerPolicy):
     unchanged."""
 
     def __init__(self, *, similarity_threshold: float = 0.9,
+                 sift_method: str = "better-twin",
                  max_experts: Optional[int] = None,
                  qos: Optional[float] = None, beta_method: str = "auto",
                  inter_cost: float = 1.0,
                  comp_coeff_range: tuple = (0.1, 1.0)):
+        if sift_method not in ("better-twin", "sequential"):
+            raise ValueError(f"unknown sift method {sift_method!r}")
         self.similarity_threshold = similarity_threshold
+        self.sift_method = sift_method
         self.max_experts = max_experts  # None -> ctx.max_experts
         self.qos = qos                  # None -> ctx.qos (layer schedule)
         self.beta_method = beta_method
@@ -225,10 +286,12 @@ class SiftMoEPolicy(SchedulerPolicy):
         prices = energy_lib.selection_costs(
             rates_kk, beta0, ctx.comp_coeff, ctx.s0, ctx.p0)  # (K, E)
 
+        sift = (sift_representatives if self.sift_method == "better-twin"
+                else sift_representatives_sequential)
         alpha = np.zeros(ctx.gate_scores.shape, dtype=np.int8)
         for i in range(ctx.num_sources):
             g = np.asarray(ctx.gate_scores[i], dtype=np.float64)
-            reps = sift_representatives(
+            reps = sift(
                 gate_similarity(g), g.sum(axis=0), prices[i],
                 self.similarity_threshold)
             alpha[i] = _cover_tokens(g, reps, qos, d)
@@ -247,7 +310,8 @@ class SiftMoEPolicy(SchedulerPolicy):
             max_experts or top_k)
         q = self.qos if self.qos is not None else qos
         return siftmoe_mask(gates, costs, q, d,
-                            threshold=self.similarity_threshold)
+                            threshold=self.similarity_threshold,
+                            method=self.sift_method)
 
     def in_graph_costs(self, num_experts: int):
         from repro.schedulers.graph import default_in_graph_costs

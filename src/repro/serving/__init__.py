@@ -1,8 +1,15 @@
 from repro.serving.engine import ServingEngine, Request, EngineStats
 from repro.serving.dmoe_sim import DMoESimulator, SimResult
 from repro.serving.continuous import ContinuousEngine, ContinuousStats
-from repro.serving.churn import ChurnConfig, schedule_with_churn
+from repro.serving.churn import ChurnConfig, ChurnProcess, schedule_with_churn
+from repro.serving.workload import (QoSClass, ServeRequest, WorkloadConfig,
+                                    generate_workload)
+from repro.serving.frontend import (FrontendConfig, ServingFrontend,
+                                    ServingReport, serve_workload)
 
 __all__ = ["ServingEngine", "Request", "EngineStats", "DMoESimulator",
            "SimResult", "ContinuousEngine", "ContinuousStats",
-           "ChurnConfig", "schedule_with_churn"]
+           "ChurnConfig", "ChurnProcess", "schedule_with_churn",
+           "QoSClass", "ServeRequest", "WorkloadConfig",
+           "generate_workload", "FrontendConfig", "ServingFrontend",
+           "ServingReport", "serve_workload"]

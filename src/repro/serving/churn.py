@@ -30,19 +30,53 @@ class ChurnConfig:
     seed: int = 0
 
 
+def _draw_round(rng: np.random.Generator, k: int,
+                cfg: ChurnConfig) -> np.ndarray:
+    """One round's (K,) availability draw (shared by the offline trace
+    and the streaming `ChurnProcess`, so their sequences match)."""
+    off = rng.random(k) < cfg.p_leave
+    if (~off).sum() < cfg.min_alive:
+        keep = rng.choice(k, size=cfg.min_alive, replace=False)
+        off[:] = True
+        off[keep] = False
+    return ~off
+
+
 def availability_trace(k: int, num_rounds: int, cfg: ChurnConfig,
                        ) -> np.ndarray:
     """(L, K) bool — True = expert available in that round."""
     rng = np.random.default_rng(cfg.seed)
     alive = np.ones((num_rounds, k), dtype=bool)
     for r in range(num_rounds):
-        off = rng.random(k) < cfg.p_leave
-        if (~off).sum() < cfg.min_alive:
-            keep = rng.choice(k, size=cfg.min_alive, replace=False)
-            off[:] = True
-            off[keep] = False
-        alive[r] = ~off
+        alive[r] = _draw_round(rng, k, cfg)
     return alive
+
+
+class ChurnProcess:
+    """Streaming availability draws for serving loops whose total round
+    count is not known up front (continuous batching: the horizon depends
+    on the traffic).  `step()` yields exactly the rows
+    `availability_trace(k, ·, cfg)` would produce for the same config —
+    asserted by tests/test_serving_tier.py — so offline replays of a
+    serving trace see the identical churn sequence."""
+
+    def __init__(self, k: int, cfg: ChurnConfig):
+        self.k = k
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+        self.rounds = 0
+        self.alive_sum = 0.0
+
+    def step(self) -> np.ndarray:
+        """(K,) bool availability for the next round."""
+        alive = _draw_round(self._rng, self.k, self.cfg)
+        self.rounds += 1
+        self.alive_sum += float(alive.sum())
+        return alive
+
+    @property
+    def mean_alive(self) -> float:
+        return self.alive_sum / max(self.rounds, 1)
 
 
 def masked_des_select(

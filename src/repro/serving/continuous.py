@@ -37,13 +37,20 @@ class ContinuousStats:
 
     @property
     def mean_occupancy(self) -> float:
+        # zero-step runs (empty request list, or all-zero token budgets)
+        # must report 0.0, never divide by zero
         return self.occupancy_sum / max(self.decode_steps, 1)
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.decode_tokens / self.wall_s if self.wall_s > 0 else 0.0
 
 
 class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, *, slots: int = 4,
                  max_len: int = 128, seed: int = 0):
         assert not cfg.enc_dec, "continuous engine: decoder-only models"
+        assert slots >= 1, f"need at least one decode slot, got {slots}"
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -82,6 +89,17 @@ class ContinuousEngine:
         def admit(slot: int):
             nonlocal caches, tok
             req = queue.pop(0)
+            if len(req.prompt) == 0:
+                raise ValueError(
+                    f"request {req.uid}: empty prompt (prefill needs at "
+                    "least one token)")
+            if req.max_new_tokens <= 0:
+                # zero-budget request: complete immediately with an empty
+                # output — never occupies a slot, never decodes (a decode
+                # step would index into a zero-length output buffer).
+                req.output = np.zeros(0, dtype=np.int32)
+                stats.admissions += 1
+                return
             slot_caches = model_lib.init_caches(cfg, 1, self.max_len)
             logits, slot_caches = self._prefill1(
                 self.params, {"tokens": jnp.asarray(req.prompt)[None, :]},
@@ -101,7 +119,10 @@ class ContinuousEngine:
                     admit(s)
             n_live = sum(l is not None for l in live)
             if n_live == 0:
-                break
+                # nothing decoding, but the queue may still hold
+                # zero-budget requests — keep draining instead of
+                # abandoning them with output=None
+                continue
             logits, caches = self._decode(self.params, tok, caches)
             new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             stats.decode_steps += 1

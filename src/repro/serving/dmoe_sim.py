@@ -55,6 +55,10 @@ class SimResult:
     rounds: List[proto.RoundAccounting]
     summary: Dict
     selection_hist: np.ndarray         # (L, K) expert selection frequency
+    #: the per-round policy decisions (one `RoundSchedule` per layer) —
+    #: recorded so serving front-ends can prove their per-round schedules
+    #: bit-identical to an offline simulator run on the same trace.
+    schedules: List[RoundSchedule] = dataclasses.field(default_factory=list)
 
 
 class DMoESimulator:
@@ -141,6 +145,7 @@ class DMoESimulator:
         x = x.astype(jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16)
 
         rounds: List[proto.RoundAccounting] = []
+        schedules: List[RoundSchedule] = []
         hist = np.zeros((cfg.num_layers, self.k))
 
         for layer in range(cfg.num_layers):
@@ -166,6 +171,7 @@ class DMoESimulator:
             if not self.overlap:
                 ye = self._expert_ffn(h, p)
             alpha, beta = rs.alpha, rs.beta
+            schedules.append(rs)
             hist[layer] = alpha.sum(axis=(0, 1)) / max(alpha.sum(), 1)
 
             # -- steps 4-5: forward tx + FFN + backward tx + aggregate -
@@ -190,4 +196,5 @@ class DMoESimulator:
             rounds=rounds,
             summary=proto.summarize(rounds),
             selection_hist=hist,
+            schedules=schedules,
         )

@@ -1,0 +1,234 @@
+"""Traffic generator for the production serving tier.
+
+Simulates the request stream of thousands of concurrent users hitting a
+DMoE edge deployment: each request arrives at a stochastic time, carries a
+token budget (how many tokens the user wants decoded) and a QoS class
+(how long the user is willing to wait), and is fully reproducible from
+one seed — the same `WorkloadConfig` always produces the same trace,
+which is what makes the serving benchmarks and the deterministic-replay
+tests possible.
+
+Two arrival processes (paper-agnostic, standard in serving literature):
+
+  * ``poisson`` — memoryless arrivals at a constant mean rate
+    (`poisson_arrivals`); models a large population of independent
+    users, the classic M/G/k regime;
+  * ``mmpp`` — a 2-state Markov-modulated Poisson process
+    (`mmpp_arrivals`): the stream alternates between a calm state and a
+    burst state whose rate is ``burst_factor`` times higher, with
+    exponentially-distributed dwell times.  The long-run mean rate is
+    held at ``rate_hz`` regardless of the burst parameters, so Poisson
+    and MMPP sweeps at the same nominal load are directly comparable —
+    the difference the benchmark measures is pure burstiness.
+
+QoS classes express deadlines as *slack multipliers* over the ideal
+(unloaded) service time rather than absolute seconds, so one class
+definition stays meaningful across scenarios whose simulated round times
+differ (the front-end resolves them against its own time model; see
+`repro.serving.frontend.ServingFrontend`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.engine import Request
+
+
+# ----------------------------------------------------------------------
+# QoS classes
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QoSClass:
+    """One service class of the request mix.
+
+    ``ttft_slack`` / ``deadline_slack`` multiply the front-end's ideal
+    (unloaded) time-to-first-token / total service time for the request;
+    a served request violates its QoS if either resolved deadline is
+    exceeded.  ``weight`` is the class's share of the mix (normalized
+    over the configured classes).
+    """
+
+    name: str
+    ttft_slack: float
+    deadline_slack: float
+    min_new_tokens: int
+    max_new_tokens: int
+    weight: float = 1.0
+
+
+#: Default 3-class mix: latency-critical chat, ordinary requests, and
+#: deadline-insensitive batch jobs with larger budgets.
+DEFAULT_CLASSES: Tuple[QoSClass, ...] = (
+    QoSClass("interactive", ttft_slack=2.0, deadline_slack=1.5,
+             min_new_tokens=2, max_new_tokens=6, weight=0.5),
+    QoSClass("standard", ttft_slack=4.0, deadline_slack=3.0,
+             min_new_tokens=4, max_new_tokens=10, weight=0.35),
+    QoSClass("batch", ttft_slack=12.0, deadline_slack=8.0,
+             min_new_tokens=8, max_new_tokens=16, weight=0.15),
+)
+
+
+# ----------------------------------------------------------------------
+# Requests
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeRequest(Request):
+    """A `repro.serving.engine.Request` with an arrival time and QoS
+    metadata; the front-end fills the timing fields as it serves."""
+
+    arrive_s: float = 0.0
+    qos_class: str = "standard"
+    ttft_slack: float = float("inf")
+    deadline_slack: float = float("inf")
+    domain: int = 0
+    # --- filled by the serving front-end ---------------------------
+    admit_s: float = -1.0         # admission into a decode slot
+    first_token_s: float = -1.0   # time-to-first-token reference point
+    finish_s: float = -1.0        # last token emitted
+    tokens_done: int = 0
+
+    @property
+    def latency_sim_s(self) -> float:
+        """Simulated-clock completion latency (finish - arrival)."""
+        return self.finish_s - self.arrive_s if self.finish_s >= 0 else -1.0
+
+    @property
+    def ttft_sim_s(self) -> float:
+        """Simulated-clock time to first token."""
+        return (self.first_token_s - self.arrive_s
+                if self.first_token_s >= 0 else -1.0)
+
+
+# ----------------------------------------------------------------------
+# Arrival processes
+# ----------------------------------------------------------------------
+
+def poisson_arrivals(rate_hz: float, n: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """(n,) nondecreasing arrival times of a homogeneous Poisson process
+    with mean rate ``rate_hz`` (exponential inter-arrival gaps)."""
+    if n <= 0:
+        return np.zeros(0, dtype=np.float64)
+    if rate_hz <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate_hz}")
+    return np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+
+
+def mmpp_arrivals(rate_hz: float, n: int, rng: np.random.Generator, *,
+                  burst_factor: float = 5.0, burst_fraction: float = 0.25,
+                  mean_dwell_s: float = 4.0) -> np.ndarray:
+    """(n,) arrival times of a 2-state Markov-modulated Poisson process.
+
+    The process alternates calm <-> burst with exponential dwell times
+    (mean ``mean_dwell_s`` in the calm state; scaled so the long-run
+    fraction of time spent bursting is ``burst_fraction``).  The burst
+    state's rate is ``burst_factor`` times the calm rate, and the calm
+    rate is solved so the LONG-RUN MEAN rate equals ``rate_hz``:
+
+        rate_hz = (1 - f) * r_calm + f * burst_factor * r_calm
+
+    so MMPP and Poisson traces at the same ``rate_hz`` carry the same
+    average load and differ only in burstiness.
+    """
+    if n <= 0:
+        return np.zeros(0, dtype=np.float64)
+    if rate_hz <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate_hz}")
+    if not 0.0 < burst_fraction < 1.0:
+        raise ValueError(
+            f"burst_fraction must be in (0, 1), got {burst_fraction}")
+    if burst_factor < 1.0:
+        raise ValueError(f"burst_factor must be >= 1, got {burst_factor}")
+    f = burst_fraction
+    r_calm = rate_hz / ((1.0 - f) + f * burst_factor)
+    rates = (r_calm, r_calm * burst_factor)
+    # dwell means chosen so time-average burst occupancy is f
+    dwells = (mean_dwell_s, mean_dwell_s * f / (1.0 - f))
+
+    times: List[float] = []
+    t, state = 0.0, 0
+    while len(times) < n:
+        dwell = rng.exponential(dwells[state])
+        # homogeneous Poisson arrivals inside this dwell period
+        tau = t + rng.exponential(1.0 / rates[state])
+        while tau <= t + dwell and len(times) < n:
+            times.append(tau)
+            tau += rng.exponential(1.0 / rates[state])
+        t += dwell
+        state = 1 - state
+    return np.asarray(times, dtype=np.float64)
+
+
+# ----------------------------------------------------------------------
+# Workload generation
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """One reproducible request trace: arrival process + request mix."""
+
+    num_requests: int = 256
+    arrival: str = "poisson"            # "poisson" | "mmpp"
+    rate_hz: float = 2.0                # mean arrival rate (both processes)
+    burst_factor: float = 5.0           # mmpp: burst/calm rate ratio
+    burst_fraction: float = 0.25        # mmpp: long-run burst occupancy
+    mean_dwell_s: float = 4.0           # mmpp: calm-state mean dwell
+    prompt_tokens: Tuple[int, int] = (4, 10)   # inclusive range
+    domains: Tuple[int, ...] = (0, 1, 2)
+    classes: Tuple[QoSClass, ...] = DEFAULT_CLASSES
+    vocab_size: int = 256
+    seed: int = 0
+
+
+def generate_workload(cfg: WorkloadConfig) -> List[ServeRequest]:
+    """The seeded trace: requests sorted by arrival time.
+
+    Everything — arrival times, prompts, budgets, domains, class draws —
+    comes from one `numpy.random.default_rng(cfg.seed)` stream, so equal
+    configs produce bit-equal traces (the deterministic-replay contract
+    of tests/test_serving_tier.py).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    n = cfg.num_requests
+    if cfg.arrival == "poisson":
+        arrive = poisson_arrivals(cfg.rate_hz, n, rng)
+    elif cfg.arrival == "mmpp":
+        arrive = mmpp_arrivals(
+            cfg.rate_hz, n, rng, burst_factor=cfg.burst_factor,
+            burst_fraction=cfg.burst_fraction,
+            mean_dwell_s=cfg.mean_dwell_s)
+    else:
+        raise ValueError(
+            f"unknown arrival process {cfg.arrival!r} "
+            "(expected 'poisson' or 'mmpp')")
+
+    weights = np.asarray([c.weight for c in cfg.classes], dtype=np.float64)
+    if not cfg.classes or (weights <= 0).all():
+        raise ValueError("workload needs at least one positively-weighted "
+                         "QoS class")
+    weights = weights / weights.sum()
+    class_idx = rng.choice(len(cfg.classes), size=n, p=weights)
+    lo_p, hi_p = cfg.prompt_tokens
+    plens = rng.integers(lo_p, hi_p + 1, size=n)
+    domains = rng.choice(np.asarray(cfg.domains), size=n)
+
+    requests: List[ServeRequest] = []
+    for i in range(n):
+        qc = cfg.classes[int(class_idx[i])]
+        budget = int(rng.integers(qc.min_new_tokens,
+                                  qc.max_new_tokens + 1))
+        prompt = rng.integers(1, cfg.vocab_size,
+                              size=int(plens[i])).astype(np.int32)
+        requests.append(ServeRequest(
+            uid=i, prompt=prompt, max_new_tokens=budget,
+            arrive_s=float(arrive[i]), qos_class=qc.name,
+            ttft_slack=qc.ttft_slack, deadline_slack=qc.deadline_slack,
+            domain=int(domains[i])))
+    requests.sort(key=lambda r: (r.arrive_s, r.uid))
+    return requests

@@ -361,3 +361,80 @@ def test_engine_use_des_routing_accepts_ported_baseline(smoke_cfg):
         0, smoke_cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=2)]
     eng.serve(reqs)
     assert reqs[0].output is not None
+
+
+# ----------------------------------------------------------------------
+# siftmoe sequential leader clustering (the paper's original sift)
+# ----------------------------------------------------------------------
+
+def test_sequential_sift_differs_on_similarity_chains():
+    """A~B, B~C, A!~C with priority A>B>C: better-twin keeps only A
+    (B and C each have a higher-priority twin), sequential keeps A and C
+    (C is dissimilar to the surviving leader A)."""
+    from repro.schedulers.siftmoe import sift_representatives_sequential
+
+    sim = np.array([[1.0, 0.95, 0.10],
+                    [0.95, 1.0, 0.95],
+                    [0.10, 0.95, 1.0]])
+    mass = np.array([3.0, 2.0, 1.0])
+    prices = np.ones(3)
+    assert list(sift_representatives(sim, mass, prices, 0.9)) == \
+        [True, False, False]
+    assert list(sift_representatives_sequential(sim, mass, prices, 0.9)) == \
+        [True, False, True]
+
+
+def test_sequential_sift_agrees_without_chains():
+    """On an exact-duplicate pair (no chain structure) both rules keep
+    the same representative — the cheap twin."""
+    from repro.schedulers.siftmoe import sift_representatives_sequential
+
+    rng = np.random.default_rng(0)
+    g = rng.dirichlet(np.ones(4), size=(8,))
+    g[:, 1] = g[:, 0]
+    sim = gate_similarity(g)
+    prices = np.array([2.0, 1.0, 1.0, 1.0])
+    bt = sift_representatives(sim, g.sum(0), prices, 0.95)
+    sq = sift_representatives_sequential(sim, g.sum(0), prices, 0.95)
+    np.testing.assert_array_equal(bt, sq)
+    assert not sq[0] and sq[1]
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sequential_mask_scan_matches_host(seed):
+    """The `lax.scan` in-graph sequential sift selects exactly the host
+    loop's representatives (checked through the full routing mask)."""
+    import jax.numpy as jnp
+
+    from repro.schedulers.siftmoe import (_cover_tokens,
+                                          sift_representatives_sequential)
+
+    rng = np.random.default_rng(seed)
+    n, e, d, qos, thr = 10, 6, 3, 0.5, 0.8
+    g = rng.dirichlet(np.ones(e) * 0.5, size=n)
+    costs = rng.uniform(0.5, 2.0, size=e)
+    got = np.asarray(siftmoe_mask(
+        jnp.asarray(g, jnp.float32), jnp.asarray(costs), qos, d,
+        threshold=thr, method="sequential"))
+    reps = sift_representatives_sequential(
+        gate_similarity(g), g.sum(0), costs, thr)
+    want = _cover_tokens(g, reps, qos, d)
+    np.testing.assert_array_equal(got.astype(np.int8), want)
+
+
+def test_siftmoe_policy_sift_method_knob():
+    """`sift_method` reaches both the host schedule and the in-graph
+    route_mask; unknown methods are rejected at construction."""
+    ccfg, rates, g = _instance(2)
+    ctx = _ctx(ccfg, rates, g, 2)
+    for method in ("better-twin", "sequential"):
+        p = get_policy("siftmoe", sift_method=method)
+        rs = p.schedule(ctx)
+        assert isinstance(rs, RoundSchedule)
+        assert (rs.alpha.sum(axis=-1) <= D).all()
+        m = p.route_mask(np.asarray(g[0]), qos=QOS, max_experts=D)
+        assert np.asarray(m).shape == g[0].shape
+    with pytest.raises(ValueError, match="sift method"):
+        get_policy("siftmoe", sift_method="kmeans")
+    with pytest.raises(ValueError, match="sift method"):
+        siftmoe_mask(np.ones((2, 3)), None, 0.3, 2, method="kmeans")

@@ -51,3 +51,49 @@ def test_continuous_overlaps_slots(cfg):
     stats = eng.serve(reqs)
     assert stats.mean_occupancy > 1.5
     assert stats.decode_steps < 6 * 4   # strictly better than sequential
+
+
+def test_continuous_empty_request_list(cfg):
+    """Zero requests: zero steps and zero-valued (not NaN) derived
+    stats."""
+    eng = ContinuousEngine(cfg, slots=2, max_len=48, seed=0)
+    stats = eng.serve([])
+    assert stats.decode_steps == stats.decode_tokens == 0
+    assert stats.mean_occupancy == 0.0
+    assert stats.decode_tok_per_s == 0.0
+
+
+def test_continuous_zero_budget_requests_drain(cfg):
+    """max_new_tokens=0 requests complete immediately with an empty
+    output — even when the whole queue is zero-budget (the serve loop
+    must keep draining rather than abandon them with output=None)."""
+    reqs = _requests(cfg, 3, seed=3)
+    for r in reqs:
+        r.max_new_tokens = 0
+    eng = ContinuousEngine(cfg, slots=2, max_len=48, seed=0)
+    stats = eng.serve(reqs)
+    assert stats.admissions == 3 and stats.decode_steps == 0
+    for r in reqs:
+        assert r.output is not None and len(r.output) == 0
+
+    # mixed: zero-budget riders between normal requests
+    reqs = _requests(cfg, 4, seed=4)
+    reqs[1].max_new_tokens = 0
+    stats = eng.serve(reqs)
+    assert stats.admissions == 4
+    assert len(reqs[1].output) == 0
+    for r in (reqs[0], reqs[2], reqs[3]):
+        assert len(r.output) == r.max_new_tokens
+
+
+def test_continuous_empty_prompt_rejected(cfg):
+    reqs = _requests(cfg, 1, seed=5)
+    reqs[0].prompt = np.zeros(0, dtype=np.int32)
+    eng = ContinuousEngine(cfg, slots=1, max_len=48, seed=0)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.serve(reqs)
+
+
+def test_continuous_rejects_zero_slots(cfg):
+    with pytest.raises(AssertionError, match="decode slot"):
+        ContinuousEngine(cfg, slots=0, max_len=48, seed=0)

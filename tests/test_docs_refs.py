@@ -112,7 +112,9 @@ def test_path_refs_resolve(doc, ref):
                                     "repro.schedulers.async_des",
                                     "repro.schedulers.channel_aware",
                                     "repro.schedulers.siftmoe",
-                                    "repro.distributed.multihost"])
+                                    "repro.distributed.multihost",
+                                    "repro.serving.workload",
+                                    "repro.serving.frontend"])
 def test_paper_map_covers_public_functions(module):
     """Acceptance contract: docs/paper_map.md names every public function
     (and public class) of the core solver modules and the sharded /
@@ -155,3 +157,30 @@ def test_policy_lists_do_not_drift():
         if f"### `{name}`" not in baselines_md:
             missing.append(f"docs/baselines.md section: {name}")
     assert not missing, f"undocumented policies: {missing}"
+
+
+def test_serving_bench_covers_every_policy():
+    """The committed serving-tier artifact cannot silently skip a
+    policy: every registered name must appear as a swept point (at >= 3
+    arrival rates) in BENCH_serving.json.  Registering a policy without
+    re-running `benchmarks/serving_bench.py --quick` fails here."""
+    import json
+
+    import repro.schedulers as schedulers
+
+    bench_path = REPO / "BENCH_serving.json"
+    assert bench_path.is_file(), (
+        "BENCH_serving.json missing — run "
+        "`PYTHONPATH=src python -m benchmarks.serving_bench --quick`")
+    bench = json.loads(bench_path.read_text())
+    missing, thin = [], []
+    for name in schedulers.available_policies():
+        rates = {p["rate_hz"] for p in bench["points"]
+                 if p["policy"] == name}
+        if not rates:
+            missing.append(name)
+        elif len(rates) < 3:
+            thin.append(f"{name} ({len(rates)} rates)")
+    assert not missing and not thin, (
+        f"BENCH_serving.json stale — unswept policies: {missing}, "
+        f"under-swept: {thin}; re-run benchmarks/serving_bench.py --quick")

@@ -1,0 +1,289 @@
+"""Serving tier: workload generation, front-end metrics, deterministic
+replay, churn-during-serving, and the pool/sim <-> offline-simulator
+parity gate (schedules bit-identical on the same token trace)."""
+
+import numpy as np
+import pytest
+
+from repro.data.tasks import mixed_cost_pool
+from repro.schedulers import available_policies, get_policy
+from repro.serving.churn import ChurnConfig, ChurnProcess, availability_trace
+from repro.serving.frontend import (FrontendConfig, ServingFrontend,
+                                    latency_percentiles, serve_workload)
+from repro.serving.workload import (DEFAULT_CLASSES, QoSClass,
+                                    WorkloadConfig, generate_workload,
+                                    mmpp_arrivals, poisson_arrivals)
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return mixed_cost_pool(k=K, num_domains=3)
+
+
+# small budgets so the per-policy smoke stays cheap
+TINY_CLASSES = (QoSClass("interactive", 2.0, 1.5, 2, 3, 0.5),
+                QoSClass("batch", 12.0, 8.0, 2, 4, 0.5))
+
+
+def _tiny_workload(n=4, rate=2.0, seed=0, **kw):
+    return generate_workload(WorkloadConfig(
+        num_requests=n, rate_hz=rate, classes=TINY_CLASSES, seed=seed, **kw))
+
+
+# ----------------------------------------------------------------------
+# metrics units
+# ----------------------------------------------------------------------
+
+def test_percentiles_empty_is_zero_not_nan():
+    p = latency_percentiles([])
+    assert p == {"p50": 0.0, "p90": 0.0, "p99": 0.0}
+
+
+def test_percentiles_known_values():
+    xs = list(range(1, 101))                     # 1..100
+    p = latency_percentiles(xs)
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p90"] == pytest.approx(90.1)
+    assert p["p99"] == pytest.approx(99.01)
+    assert latency_percentiles([7.0])["p99"] == 7.0
+
+
+def test_percentiles_filter_non_finite():
+    p = latency_percentiles([1.0, np.nan, np.inf, 3.0])
+    assert p["p50"] == pytest.approx(2.0)
+
+
+# ----------------------------------------------------------------------
+# workload generator
+# ----------------------------------------------------------------------
+
+def test_arrival_processes_hold_mean_rate():
+    rng = np.random.default_rng(0)
+    t_p = poisson_arrivals(4.0, 4000, rng)
+    assert t_p[-1] == pytest.approx(1000.0, rel=0.1)
+    assert np.all(np.diff(t_p) >= 0)
+    rng = np.random.default_rng(0)
+    t_m = mmpp_arrivals(4.0, 4000, rng, burst_factor=5.0)
+    assert t_m[-1] == pytest.approx(1000.0, rel=0.15)
+    assert np.all(np.diff(t_m) >= 0)
+
+
+def test_mmpp_is_burstier_than_poisson():
+    rng = np.random.default_rng(1)
+    cv_p = np.std(np.diff(poisson_arrivals(2.0, 5000, rng))) / 0.5
+    rng = np.random.default_rng(1)
+    gaps = np.diff(mmpp_arrivals(2.0, 5000, rng, burst_factor=8.0))
+    cv_m = np.std(gaps) / np.mean(gaps)
+    assert cv_m > cv_p
+
+
+def test_workload_seeded_and_sorted():
+    a = generate_workload(WorkloadConfig(num_requests=32, seed=7))
+    b = generate_workload(WorkloadConfig(num_requests=32, seed=7))
+    c = generate_workload(WorkloadConfig(num_requests=32, seed=8))
+    for ra, rb in zip(a, b):
+        assert ra.arrive_s == rb.arrive_s
+        assert ra.qos_class == rb.qos_class
+        assert ra.max_new_tokens == rb.max_new_tokens
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    assert [r.arrive_s for r in a] == sorted(r.arrive_s for r in a)
+    assert any(x.arrive_s != y.arrive_s for x, y in zip(a, c))
+    names = {cls.name for cls in DEFAULT_CLASSES}
+    assert {r.qos_class for r in a} <= names
+
+
+# ----------------------------------------------------------------------
+# deterministic replay
+# ----------------------------------------------------------------------
+
+def test_same_seed_replays_identical_trace_and_schedules(pool):
+    cfg = FrontendConfig(num_layers=3, record_trace=True, seed=11)
+    reps = []
+    for _ in range(2):
+        reqs = _tiny_workload(n=5, seed=3)
+        reps.append(serve_workload("jesa", pool, reqs, cfg=cfg))
+    a, b = reps
+
+    def sim_only(rep):
+        j = rep.to_json()
+        # host wall clocks are real time, not part of the replay contract
+        for key in ("wall_s", "sched_wall_s", "sched_tok_s"):
+            j.pop(key)
+        return j
+
+    assert sim_only(a) == sim_only(b)
+    assert len(a.trace) == len(b.trace) > 0
+    for ra, rb in zip(a.trace, b.trace):
+        np.testing.assert_array_equal(ra.alpha, rb.alpha)
+        if ra.beta is None:
+            assert rb.beta is None
+        else:
+            np.testing.assert_array_equal(ra.beta, rb.beta)
+        assert ra.round_s == rb.round_s
+        assert ra.qos == rb.qos
+
+
+def test_report_json_is_finite(pool):
+    import json
+    reqs = _tiny_workload(n=4, seed=4)
+    rep = serve_workload("topk", pool, reqs, cfg=FrontendConfig(num_layers=2))
+    j = rep.to_json()
+    json.dumps(j)                                 # serializable
+    flat = [j["makespan_s"], j["throughput_tok_s"], j["sched_tok_s"],
+            j["queue_wait_mean_s"], j["qos_violation_rate"],
+            *j["latency_s"].values(), *j["ttft_s"].values()]
+    assert all(np.isfinite(v) for v in flat)
+
+
+def test_empty_and_zero_budget_requests(pool):
+    rep = serve_workload("topk", pool, [], cfg=FrontendConfig(num_layers=2))
+    assert rep.num_requests == rep.completed == rep.tokens_out == 0
+    assert rep.throughput_tok_s == 0.0            # no NaN on empty
+
+    reqs = _tiny_workload(n=4, seed=5)
+    reqs[1].max_new_tokens = 0                    # zero-budget rider
+    rep = serve_workload("topk", pool, reqs, cfg=FrontendConfig(num_layers=2))
+    assert rep.completed == 4
+    zb = next(r for r in rep.requests if r.max_new_tokens == 0)
+    assert zb.finish_s >= 0 and zb.tokens_done == 0 and len(zb.output) == 0
+
+
+# ----------------------------------------------------------------------
+# churn during serving — every registered policy
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", available_policies())
+def test_churn_during_serving_smoke(pool, policy):
+    """Every registry policy serves a churning deployment: all requests
+    finish and no dead expert is ever scheduled (the hard mask)."""
+    cfg = FrontendConfig(
+        num_layers=2, record_trace=True, seed=13,
+        churn=ChurnConfig(p_leave=0.4, min_alive=3, seed=21))
+    reqs = _tiny_workload(n=3, seed=6)
+    rep = serve_workload(policy, pool, reqs, cfg=cfg)
+    assert rep.completed == 3
+    assert 3 <= rep.mean_alive <= K
+    assert rep.trace
+    for rec in rep.trace:
+        dead = ~rec.alive
+        assert rec.alpha[:, :, dead].sum() == 0
+
+
+def test_churn_process_matches_availability_trace():
+    cfg = ChurnConfig(p_leave=0.35, min_alive=2, seed=9)
+    trace = availability_trace(K, 40, cfg)
+    proc = ChurnProcess(K, cfg)
+    got = np.stack([proc.step() for _ in range(40)])
+    np.testing.assert_array_equal(got, trace)
+    assert proc.rounds == 40
+    assert proc.mean_alive == pytest.approx(trace.sum() / 40)
+
+
+# ----------------------------------------------------------------------
+# pool-mode structural invariants
+# ----------------------------------------------------------------------
+
+def test_padding_rows_never_scheduled(pool):
+    """Free slots are zero gate rows; no schedule may select for them."""
+    cfg = FrontendConfig(num_layers=2, record_trace=True, seed=2)
+    reqs = _tiny_workload(n=2, seed=8)            # 2 requests, 8 slots
+    rep = serve_workload("jesa", pool, reqs, cfg=cfg)
+    for rec in rep.trace:
+        assert rec.alpha.shape[0] == K
+        assert rec.live_slots <= 2
+
+
+def test_scheduler_stats_surface(pool):
+    """Policies exposing last_stats (sharded/async tiers) surface them in
+    the report."""
+    reqs = _tiny_workload(n=2, seed=9)
+    rep = serve_workload("sharded-des", pool, reqs,
+                         cfg=FrontendConfig(num_layers=2))
+    assert rep.scheduler_stats                    # easy/hard split counters
+    assert rep.des_nodes >= 0
+
+
+# ----------------------------------------------------------------------
+# the parity gate: serving loop == offline simulator, bit for bit
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ("jesa", "topk"))
+def test_sim_mode_schedules_bit_identical_to_offline(scheme):
+    from repro.configs.base import get_smoke_config
+    from repro.serving.dmoe_sim import DMoESimulator
+
+    cfg = get_smoke_config("mixtral-8x7b").with_overrides(
+        num_layers=2, moe_num_experts=4)
+    sim = DMoESimulator(cfg, scheme=scheme, seed=3)
+    front = ServingFrontend(sim=sim, cfg=FrontendConfig(
+        num_layers=2, record_trace=True, seed=3))
+    reqs = generate_workload(WorkloadConfig(
+        num_requests=4, rate_hz=2.0, prompt_tokens=(6, 6),
+        classes=TINY_CLASSES, seed=7, vocab_size=cfg.vocab_size))
+    rep = front.serve(reqs)
+    assert rep.completed == 4 and front.served_batches
+
+    # a FRESH simulator (same cfg/scheme/seed) replayed on the recorded
+    # token batches must reproduce every (alpha, beta) bit for bit
+    ref = DMoESimulator(cfg, scheme=scheme, seed=3)
+    i = 0
+    for batch in front.served_batches:
+        res = ref.serve(batch)
+        for rs in res.schedules:
+            rec = rep.trace[i]
+            np.testing.assert_array_equal(rs.alpha, rec.alpha)
+            if rs.beta is None:
+                assert rec.beta is None
+            else:
+                np.testing.assert_array_equal(rs.beta, rec.beta)
+            i += 1
+    assert i == rep.rounds == len(rep.trace)
+
+
+def test_sim_mode_rejects_mixed_prompt_lengths():
+    from repro.configs.base import get_smoke_config
+    from repro.serving.dmoe_sim import DMoESimulator
+
+    cfg = get_smoke_config("mixtral-8x7b").with_overrides(
+        num_layers=1, moe_num_experts=4)
+    front = ServingFrontend(sim=DMoESimulator(cfg, scheme="topk", seed=0),
+                            cfg=FrontendConfig(num_layers=1))
+    reqs = generate_workload(WorkloadConfig(
+        num_requests=3, prompt_tokens=(2, 9), classes=TINY_CLASSES,
+        seed=1, vocab_size=cfg.vocab_size))
+    if len({len(r.prompt) for r in reqs[:3]}) == 1:
+        pytest.skip("draw produced equal lengths")
+    with pytest.raises(ValueError, match="equal prompt lengths"):
+        front.serve(reqs)
+
+
+# ----------------------------------------------------------------------
+# front-end construction contracts
+# ----------------------------------------------------------------------
+
+def test_frontend_requires_exactly_one_backend(pool):
+    with pytest.raises(ValueError, match="exactly one"):
+        ServingFrontend(policy="jesa")
+    with pytest.raises(ValueError, match="needs a scheduler policy"):
+        ServingFrontend(pool=pool)
+    from repro.configs.base import get_smoke_config
+    from repro.serving.dmoe_sim import DMoESimulator
+    cfg = get_smoke_config("mixtral-8x7b").with_overrides(
+        num_layers=1, moe_num_experts=4)
+    sim = DMoESimulator(cfg, scheme="topk", seed=0)
+    with pytest.raises(ValueError, match="simulator's own policy"):
+        ServingFrontend(sim=sim, policy="jesa")
+
+
+def test_policy_instance_and_kwargs_paths(pool):
+    reqs = _tiny_workload(n=2, seed=10)
+    rep = serve_workload("siftmoe", pool, reqs,
+                         cfg=FrontendConfig(num_layers=2),
+                         policy_kwargs={"sift_method": "sequential"})
+    assert rep.policy == "siftmoe" and rep.completed == 2
+    front = ServingFrontend(policy=get_policy("jesa"), pool=pool,
+                            cfg=FrontendConfig(num_layers=2))
+    rep = front.serve(_tiny_workload(n=2, seed=10))
+    assert rep.policy == "jesa" and rep.completed == 2
