@@ -462,9 +462,9 @@ def run_multihost_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
     return result
 
 
-def run(verbose: bool = True, sweep: dict | None = None):
+def run(verbose: bool = True, sweep: dict | None = None, seed: int = 3):
     rows = []
-    rng = np.random.default_rng(3)
+    rng = np.random.default_rng(seed)
     with Timer() as t:
         for k in (8, 12, 16, 20):
             explored, pruned, exact_hits, trials = 0, 0, 0, 10

@@ -18,10 +18,10 @@ from repro.data.tasks import DOMAINS, table1_pool
 N_TOKENS = 64
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, seed: int = 0):
     pool = table1_pool()
     k, nd = pool.num_experts, pool.num_domains
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     rows = []
     with Timer() as t:
         # which expert does the gate prefer per domain?

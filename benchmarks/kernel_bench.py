@@ -23,10 +23,10 @@ def _time(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, seed: int = 0):
     rows = []
     out_rows = []
-    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
 
     q = jax.random.normal(ks[0], (1, 4, 256, 64))
     k = jax.random.normal(ks[1], (1, 2, 256, 64))

@@ -31,10 +31,10 @@ LAYERS = 16
 S0 = 8192.0
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, seed: int = 5):
     rows = []
     with Timer() as t:
-        rng = np.random.default_rng(5)
+        rng = np.random.default_rng(seed)
         ccfg = channel_lib.ChannelConfig(num_experts=K, num_subcarriers=M)
         comp = energy_lib.make_comp_coeffs(K)
         vert_j, split_j, insitu_hits, total_sel = 0.0, 0.0, 0, 0

@@ -1,0 +1,40 @@
+"""repro-lint: JAX/Pallas-aware static analysis + runtime sanitizers.
+
+Static side (stdlib-only, never imports jax):
+
+    python -m repro.analysis src benchmarks
+
+runs five AST checkers — host-sync, tracer-branch, rng-discipline,
+pallas-kernel, registry-docs — over the given targets, applies the
+committed ``lint_baseline.json``, and exits non-zero on any
+non-baselined finding at or above warning.  See docs/analysis.md.
+
+Runtime side (imports jax on demand): `repro.analysis.sanitizers`
+provides `recompile_guard`, `debug_nan_guard`, `assert_all_finite`,
+and `checked`.
+"""
+
+from repro.analysis.baseline import Baseline, BaselineEntry
+from repro.analysis.checkers import (CHECKERS, Checker, RepoContext,
+                                     SourceFile, available_checkers)
+from repro.analysis.engine import Report, collect_files, run_analysis
+from repro.analysis.findings import Finding, Severity
+
+_SANITIZER_NAMES = ("recompile_guard", "debug_nan_guard",
+                    "assert_all_finite", "checked", "CompileLog",
+                    "RecompileError")
+
+
+def __getattr__(name):
+    # Lazy: keep `python -m repro.analysis` free of the jax import.
+    if name in _SANITIZER_NAMES:
+        from repro.analysis import sanitizers
+        return getattr(sanitizers, name)
+    raise AttributeError(name)
+
+
+__all__ = [
+    "Baseline", "BaselineEntry", "CHECKERS", "Checker", "RepoContext",
+    "SourceFile", "available_checkers", "Report", "collect_files",
+    "run_analysis", "Finding", "Severity", *_SANITIZER_NAMES,
+]

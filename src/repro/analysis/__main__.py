@@ -1,0 +1,93 @@
+"""CLI: ``python -m repro.analysis [targets...]``.
+
+Examples
+--------
+    python -m repro.analysis src benchmarks
+    python -m repro.analysis src --format json --out lint_report.json
+    python -m repro.analysis src --update-baseline
+    python -m repro.analysis --list-checkers
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.analysis.baseline import DEFAULT_BASELINE_NAME, Baseline
+from repro.analysis.checkers import CHECKERS
+from repro.analysis.engine import run_analysis
+from repro.analysis.findings import Severity
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: JAX/Pallas-aware static analysis")
+    p.add_argument("targets", nargs="*", default=["src", "benchmarks"],
+                   help="files/directories to lint "
+                        "(default: src benchmarks)")
+    p.add_argument("--root", default=".",
+                   help="repo root (baseline + artifact lookup)")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--out", default=None,
+                   help="write the report to this file as well as "
+                        "stdout")
+    p.add_argument("--baseline", default=None,
+                   help=f"baseline path (default: "
+                        f"<root>/{DEFAULT_BASELINE_NAME})")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="report every finding, ignoring the baseline")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="append current non-baselined findings to the "
+                        "baseline (justifications start as TODO)")
+    p.add_argument("--fail-on", choices=("info", "warning", "error"),
+                   default="warning",
+                   help="minimum severity that fails the run "
+                        "(default: warning)")
+    p.add_argument("--checker", action="append", default=None,
+                   metavar="NAME", choices=sorted(CHECKERS),
+                   help="run only this checker (repeatable)")
+    p.add_argument("--list-checkers", action="store_true")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_checkers:
+        for name in sorted(CHECKERS):
+            print(f"{name}: {CHECKERS[name].description}")
+        return 0
+
+    root = pathlib.Path(args.root)
+    baseline = None
+    if not args.no_baseline:
+        bpath = pathlib.Path(args.baseline) if args.baseline \
+            else root / DEFAULT_BASELINE_NAME
+        baseline = Baseline.load(bpath)
+
+    report = run_analysis(
+        root=root, targets=args.targets, baseline=baseline,
+        fail_on=Severity.from_label(args.fail_on),
+        checkers=args.checker)
+
+    if args.update_baseline and baseline is not None:
+        added = baseline.extend_from(
+            f for f in report.findings
+            if not f.rule.startswith("BASE"))
+        baseline.save()
+        print(f"baseline: added {added} entr"
+              f"{'ies' if added != 1 else 'y'} to {baseline.path}")
+        return 0
+
+    text = json.dumps(report.to_json(), indent=2) \
+        if args.format == "json" else report.render_text()
+    print(text)
+    if args.out:
+        pathlib.Path(args.out).write_text(text + "\n")
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,127 @@
+"""Suppression baseline for repro-lint.
+
+The baseline is a committed JSON file (``lint_baseline.json`` at the
+repo root) listing findings that are *accepted*, each with a mandatory
+human justification.  Matching is keyed on ``(rule, path, context)``
+where ``context`` is the stripped source line the finding sits on — not
+the line number — so entries survive unrelated edits elsewhere in the
+file but go stale the moment the offending line changes.
+
+Stale entries (no finding matched them this run) are themselves
+reported as ``BASE001`` errors: a baseline may only shrink by deleting
+the entry together with the fix.  Entries with an empty justification
+are ``BASE002`` errors — the file is the per-finding comment record the
+CI contract requires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.findings import Finding, Severity
+
+BASELINE_VERSION = 1
+DEFAULT_BASELINE_NAME = "lint_baseline.json"
+
+
+@dataclasses.dataclass
+class BaselineEntry:
+    rule: str
+    path: str
+    context: str
+    justification: str = ""
+    matched: int = 0          # findings suppressed this run
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.context)
+
+    def to_json(self) -> Dict[str, str]:
+        return {"rule": self.rule, "path": self.path,
+                "context": self.context,
+                "justification": self.justification}
+
+
+@dataclasses.dataclass
+class Baseline:
+    path: pathlib.Path
+    entries: List[BaselineEntry] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def load(cls, path: pathlib.Path) -> "Baseline":
+        if not path.exists():
+            return cls(path=path)
+        data = json.loads(path.read_text())
+        entries = [BaselineEntry(
+            rule=e["rule"], path=e["path"], context=e.get("context", ""),
+            justification=e.get("justification", ""))
+            for e in data.get("entries", [])]
+        return cls(path=path, entries=entries)
+
+    def save(self) -> None:
+        data = {"version": BASELINE_VERSION,
+                "entries": [e.to_json() for e in sorted(
+                    self.entries, key=BaselineEntry.key)]}
+        self.path.write_text(json.dumps(data, indent=2) + "\n")
+
+    # ---- matching ----------------------------------------------------
+    def _index(self) -> Dict[Tuple[str, str, str], BaselineEntry]:
+        return {e.key(): e for e in self.entries}
+
+    def apply(self, findings: Iterable[Finding]
+              ) -> Tuple[List[Finding], List[Finding]]:
+        """Split into (active, suppressed); marks entries matched."""
+        index = self._index()
+        active: List[Finding] = []
+        suppressed: List[Finding] = []
+        for f in findings:
+            entry = index.get((f.rule, f.path, f.context))
+            if entry is not None:
+                entry.matched += 1
+                suppressed.append(f)
+            else:
+                active.append(f)
+        return active, suppressed
+
+    def audit(self) -> List[Finding]:
+        """BASE001 for stale entries, BASE002 for missing justification
+        (call after `apply`)."""
+        out: List[Finding] = []
+        for e in self.entries:
+            if e.matched == 0:
+                out.append(Finding(
+                    rule="BASE001", checker="baseline",
+                    severity=Severity.ERROR, path=e.path, line=1, col=0,
+                    message=f"stale baseline entry for {e.rule} "
+                            f"(context: {e.context!r}) — the finding no "
+                            "longer fires",
+                    hint="delete the entry from "
+                         f"{self.path.name}", context=e.context))
+            if not e.justification.strip():
+                out.append(Finding(
+                    rule="BASE002", checker="baseline",
+                    severity=Severity.ERROR, path=e.path, line=1, col=0,
+                    message=f"baseline entry for {e.rule} has no "
+                            "justification",
+                    hint="every accepted finding needs a one-line "
+                         "reason in the entry's `justification` field",
+                    context=e.context))
+        return out
+
+    def extend_from(self, findings: Iterable[Finding],
+                    justification: str = "TODO: justify") -> int:
+        """Add entries for findings not already covered (CLI
+        ``--update-baseline``).  Returns the number added."""
+        index = self._index()
+        added = 0
+        for f in findings:
+            if (f.rule, f.path, f.context) not in index:
+                e = BaselineEntry(rule=f.rule, path=f.path,
+                                  context=f.context,
+                                  justification=justification)
+                self.entries.append(e)
+                index[e.key()] = e
+                added += 1
+        return added

@@ -1,0 +1,26 @@
+"""Checker registry — importing this package registers all checkers."""
+
+from repro.analysis.checkers.base import (
+    CHECKERS,
+    Checker,
+    RepoContext,
+    SourceFile,
+    available_checkers,
+    register_checker,
+)
+
+# Import for registration side-effects.
+from repro.analysis.checkers import host_sync  # noqa: F401
+from repro.analysis.checkers import tracer_branch  # noqa: F401
+from repro.analysis.checkers import rng_discipline  # noqa: F401
+from repro.analysis.checkers import pallas_kernel  # noqa: F401
+from repro.analysis.checkers import registry_docs  # noqa: F401
+
+__all__ = [
+    "CHECKERS",
+    "Checker",
+    "RepoContext",
+    "SourceFile",
+    "available_checkers",
+    "register_checker",
+]

@@ -1,0 +1,103 @@
+"""Checker protocol + registry for the repro-lint engine.
+
+A checker is a small class with two optional hooks:
+
+* ``check_file(sf)`` — per-file AST pass; yields `Finding`s for one
+  parsed `SourceFile`;
+* ``check_repo(ctx)`` — whole-repo pass (cross-file invariants such as
+  the policy-registry <-> docs contract); runs once per analysis.
+
+Register with ``@register_checker`` and the engine picks it up; the
+fixture tests in tests/test_analysis.py assert each registered checker
+fires on its known-bad fixture, so deleting a checker (or breaking its
+detection) fails the suite.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Dict, Iterable, List, Type
+
+from repro.analysis.findings import Finding, Severity
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed target file."""
+
+    path: pathlib.Path            # absolute
+    rel: str                      # repo-relative posix path
+    text: str
+    tree: ast.AST
+    lines: List[str] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def parse(cls, path: pathlib.Path, repo_root: pathlib.Path
+              ) -> "SourceFile":
+        text = path.read_text()
+        try:
+            rel = path.resolve().relative_to(repo_root.resolve()).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        return cls(path=path, rel=rel, text=text,
+                   tree=ast.parse(text, filename=str(path)),
+                   lines=text.splitlines())
+
+    def context(self, line: int) -> str:
+        """Stripped source line (1-based), the baseline matching key."""
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+@dataclasses.dataclass
+class RepoContext:
+    """Inputs for whole-repo checks."""
+
+    root: pathlib.Path
+    files: List[SourceFile]
+
+
+class Checker:
+    """Base class; subclasses set ``name`` and override the hooks."""
+
+    name: str = "?"
+    description: str = ""
+
+    def check_file(self, sf: SourceFile) -> Iterable[Finding]:
+        return ()
+
+    def check_repo(self, ctx: RepoContext) -> Iterable[Finding]:
+        return ()
+
+    # ---- helpers -----------------------------------------------------
+    def finding(self, sf: SourceFile, node: ast.AST, rule: str,
+                severity: Severity, message: str, hint: str = "") -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(
+            rule=rule, checker=self.name, severity=severity, path=sf.rel,
+            line=line, col=getattr(node, "col_offset", 0), message=message,
+            hint=hint, context=sf.context(line))
+
+    def repo_finding(self, ctx: RepoContext, path: str, line: int,
+                     rule: str, severity: Severity, message: str,
+                     hint: str = "", context: str = "") -> Finding:
+        return Finding(rule=rule, checker=self.name, severity=severity,
+                       path=path, line=line, col=0, message=message,
+                       hint=hint, context=context)
+
+
+CHECKERS: Dict[str, Type[Checker]] = {}
+
+
+def register_checker(cls: Type[Checker]) -> Type[Checker]:
+    if cls.name in CHECKERS:
+        raise ValueError(f"duplicate checker {cls.name!r}")
+    CHECKERS[cls.name] = cls
+    return cls
+
+
+def available_checkers() -> List[str]:
+    return sorted(CHECKERS)

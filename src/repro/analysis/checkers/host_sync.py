@@ -1,0 +1,175 @@
+"""Host-sync lint: device->host materializations on the hot path.
+
+Rules
+-----
+* ``HS101`` (error) — ``.item()`` / ``.tolist()`` / ``np.asarray`` /
+  ``np.array`` applied to a *traced* value inside a jit / shard_map /
+  pallas region.  Under trace these either raise
+  ``ConcretizationTypeError`` or silently constant-fold; either way the
+  code is wrong.
+* ``HS102`` (warning) — ``float()`` / ``int()`` on a traced value inside
+  a traced region (same failure mode; warning-tier because the repo's
+  one legitimate spelling, ``int()`` of a *static* argument, is common
+  and the taint analysis proves the difference).
+* ``HS103`` (warning) — host materialization (the same sinks) of a
+  *device* value in ordinary Python on a hot-path module.  Each round
+  needs at most one such sync (the alpha handoff to the host B&B);
+  per-element or per-slot syncs serialize the decode loop.  Fix by
+  batching the transfer, or baseline with a justification.
+
+Hot-path scope for HS103: ``src/repro/schedulers/``,
+``src/repro/kernels/``, ``src/repro/serving/``,
+``src/repro/core/des_prework.py`` (+ the lint fixtures).  HS101/HS102
+apply to every linted file — a traced-region sync is wrong anywhere.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis import jaxast
+from repro.analysis.checkers.base import (Checker, SourceFile,
+                                          register_checker)
+from repro.analysis.findings import Finding, Severity
+
+#: Method calls that force a device->host copy.
+SYNC_METHODS = frozenset({"item", "tolist"})
+
+#: ``np.asarray`` / ``np.array`` style materializers, by last component.
+NP_MATERIALIZERS = frozenset({"asarray", "array", "ascontiguousarray"})
+NP_ROOTS = frozenset({"np", "numpy", "onp"})
+
+#: Registry route-mask entry points whose results are device arrays —
+#: cross-module taint sources the local analysis cannot infer.
+KNOWN_MASK_PRODUCERS = frozenset({
+    "greedy_des_mask", "topk_mask", "channel_aware_mask",
+    "siftmoe_mask", "route_mask", "jitted_prework",
+})
+
+HOT_PREFIXES = ("src/repro/schedulers/", "src/repro/kernels/",
+                "src/repro/serving/", "tests/fixtures/lint/")
+HOT_FILES = ("src/repro/core/des_prework.py",)
+
+
+def _is_np_materializer(func: ast.AST) -> bool:
+    name = jaxast.dotted_name(func)
+    if "." not in name:
+        return False
+    root, last = name.split(".", 1)[0], name.rsplit(".", 1)[-1]
+    return root in NP_ROOTS and last in NP_MATERIALIZERS
+
+
+def device_producer(func: ast.AST) -> bool:
+    """Taint source for the outside-region (HS103) analysis: jax/jnp/lax
+    calls plus the registry mask entry points."""
+    if jaxast.jax_producer(func):
+        return True
+    name = jaxast.dotted_name(func)
+    return name.rsplit(".", 1)[-1] in KNOWN_MASK_PRODUCERS
+
+
+def _hot_path(rel: str) -> bool:
+    return rel.startswith(HOT_PREFIXES) or rel in HOT_FILES
+
+
+@register_checker
+class HostSyncChecker(Checker):
+    name = "host-sync"
+    description = ("device->host syncs (.item/.tolist/np.asarray/float/"
+                   "int) inside traced regions and on hot-path modules")
+
+    def check_file(self, sf: SourceFile) -> Iterable[Finding]:
+        out: List[Finding] = []
+        seen: Set[tuple] = set()
+
+        def emit(node: ast.AST, rule: str, sev: Severity, msg: str,
+                 hint: str) -> None:
+            key = (rule, node.lineno, node.col_offset)
+            if key in seen:
+                return
+            seen.add(key)
+            out.append(self.finding(sf, node, rule, sev, msg, hint))
+
+        def scan_stmt(stmt: ast.stmt, tainted: Set[str], in_region: bool,
+                      region_name: str) -> None:
+            if isinstance(stmt, jaxast.FuncNode):
+                return  # inner statements get their own callback
+            for call in jaxast.calls_in(stmt):
+                func = call.func
+                # x.item() / x.tolist()
+                if (isinstance(func, ast.Attribute)
+                        and func.attr in SYNC_METHODS
+                        and jaxast.expr_is_tainted(
+                            func.value, tainted,
+                            None if in_region else device_producer)):
+                    if in_region:
+                        emit(call, "HS101", Severity.ERROR,
+                             f".{func.attr}() on a traced value inside "
+                             f"jitted `{region_name}`",
+                             "return the array and materialize outside "
+                             "the traced region")
+                    else:
+                        emit(call, "HS103", Severity.WARNING,
+                             f".{func.attr}() forces a device->host sync "
+                             "on a hot-path module",
+                             "batch the transfer (one np.asarray per "
+                             "round) or baseline with a justification")
+                    continue
+                # np.asarray(x) / np.array(x)
+                if _is_np_materializer(func) and call.args and \
+                        jaxast.expr_is_tainted(
+                            call.args[0], tainted,
+                            None if in_region else device_producer):
+                    if in_region:
+                        emit(call, "HS101", Severity.ERROR,
+                             "np.asarray/np.array on a traced value "
+                             f"inside jitted `{region_name}`",
+                             "use jnp inside traced code; materialize "
+                             "outside the region")
+                    else:
+                        emit(call, "HS103", Severity.WARNING,
+                             "np.asarray/np.array materializes a device "
+                             "value on a hot-path module",
+                             "keep values on device, or make this the "
+                             "round's single batched sync and baseline "
+                             "it with a justification")
+                    continue
+                # float(x) / int(x) inside traced regions only
+                if in_region and isinstance(func, ast.Name) and \
+                        func.id in ("float", "int") and call.args and \
+                        jaxast.expr_is_tainted(call.args[0], tainted, None):
+                    emit(call, "HS102", Severity.WARNING,
+                         f"{func.id}() on a traced value inside jitted "
+                         f"`{region_name}`",
+                         "only static arguments may be coerced to "
+                         "Python scalars under trace")
+
+        regions = jaxast.find_traced_regions(sf.tree)
+        region_nodes = {id(r.node) for r in regions}
+        for region in regions:
+            jaxast.walk_function_taint(
+                region.node, region.traced_params(), producer=None,
+                on_stmt=lambda s, t, r=region: scan_stmt(
+                    s, t, True, r.name))
+
+        if not _hot_path(sf.rel):
+            return out
+
+        # HS103: plain-Python functions on hot-path modules.  Walk only
+        # outermost non-traced functions; walk_function_taint descends
+        # into nested defs itself.
+        nested = set()
+        for node in ast.walk(sf.tree):
+            if isinstance(node, jaxast.FuncNode):
+                for sub in ast.walk(node):
+                    if sub is not node and isinstance(sub, jaxast.FuncNode):
+                        nested.add(id(sub))
+        for node in ast.walk(sf.tree):
+            if (isinstance(node, jaxast.FuncNode)
+                    and id(node) not in region_nodes
+                    and id(node) not in nested):
+                jaxast.walk_function_taint(
+                    node, set(), producer=device_producer,
+                    on_stmt=lambda s, t: scan_stmt(s, t, False, ""))
+        return out

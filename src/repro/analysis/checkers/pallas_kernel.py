@@ -1,0 +1,201 @@
+"""Pallas-kernel lint: structural invariants of `pl.pallas_call` sites.
+
+These are the mistakes that surface as shape errors deep inside Mosaic
+(or, in interpret mode, as silently wrong tiling) when a config change
+stops a block shape dividing its grid.
+
+Rules
+-----
+* ``PAL001`` (error) — an ``index_map`` taking a different number of
+  grid indices than the declared ``grid`` has dimensions.  Defaulted
+  lambda parameters (the ``r_=r`` closure-capture idiom) are excluded
+  from the count.
+* ``PAL002`` (error) — an ``index_map`` returning a tuple of different
+  rank than its ``BlockSpec``'s block shape.
+* ``PAL003`` (error) — ``out_specs`` block rank differing from the
+  ``out_shape`` rank, or (when both are integer literals) an
+  ``out_shape`` dimension not divisible by its block dimension.  The
+  repo's kernels pad to a multiple first (``pq = (-sq) % block_q``),
+  which is the sanctioned pattern.
+* ``PAL004`` (warning) — a rank-1 ``BlockSpec`` without an explicit
+  ``memory_space``: scalar/vector operands (e.g. per-row lengths)
+  belong in SMEM, and relying on the default ANY placement lowers
+  differently on real TPUs than in interpret mode.
+
+The analysis is call-site local, resolving one level of ``grid = (...)``
+name indirection inside the same file.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis import jaxast
+from repro.analysis.checkers.base import (Checker, SourceFile,
+                                          register_checker)
+from repro.analysis.findings import Finding, Severity
+
+
+def _tuple_len(node: Optional[ast.AST],
+               names: Dict[str, ast.AST]) -> Optional[int]:
+    """Rank of a literal tuple/list, following one name binding."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Name) and node.id in names:
+        node = names[node.id]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return 1
+    return None
+
+
+def _literal_dims(node: Optional[ast.AST],
+                  names: Dict[str, ast.AST]) -> List[Optional[int]]:
+    if isinstance(node, ast.Name) and node.id in names:
+        node = names[node.id]
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return []
+    out: List[Optional[int]] = []
+    for e in node.elts:
+        out.append(e.value if isinstance(e, ast.Constant)
+                   and isinstance(e.value, int) else None)
+    return out
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _blockspec_parts(call: ast.Call) -> Tuple[Optional[ast.AST],
+                                              Optional[ast.AST], bool]:
+    """(block_shape expr, index_map expr, has memory_space) of one
+    ``pl.BlockSpec(...)`` call."""
+    shape = call.args[0] if len(call.args) >= 1 else _kw(call,
+                                                        "block_shape")
+    imap = call.args[1] if len(call.args) >= 2 else _kw(call, "index_map")
+    return shape, imap, _kw(call, "memory_space") is not None
+
+
+def _iter_blockspecs(node: Optional[ast.AST]) -> Iterable[ast.Call]:
+    if node is None:
+        return
+    if isinstance(node, ast.Call) and jaxast.dotted_name(
+            node.func).rsplit(".", 1)[-1] == "BlockSpec":
+        yield node
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            yield from _iter_blockspecs(e)
+
+
+def _lambda_arity(node: ast.AST) -> Optional[int]:
+    """Non-defaulted parameter count of a lambda/def index_map."""
+    if not isinstance(node, (ast.Lambda,) + jaxast.FuncNode):
+        return None
+    args = node.args
+    total = len(args.posonlyargs) + len(args.args)
+    return total - len(args.defaults)
+
+
+def _lambda_return_rank(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Lambda):
+        body = node.body
+        if isinstance(body, ast.Tuple):
+            return len(body.elts)
+        return 1 if isinstance(body, (ast.Constant, ast.Name,
+                                      ast.BinOp)) else None
+    return None
+
+
+@register_checker
+class PallasKernelChecker(Checker):
+    name = "pallas-kernel"
+    description = ("BlockSpec/grid structural invariants of "
+                   "pl.pallas_call sites")
+
+    def check_file(self, sf: SourceFile) -> Iterable[Finding]:
+        out: List[Finding] = []
+        # one level of `grid = (b, h, nq, nk)` style name indirection
+        names: Dict[str, ast.AST] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)):
+                names[node.targets[0].id] = node.value
+
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call) and jaxast.dotted_name(
+                    node.func).rsplit(".", 1)[-1] == "pallas_call"):
+                continue
+            out.extend(self._check_site(sf, node, names))
+        return out
+
+    def _check_site(self, sf: SourceFile, call: ast.Call,
+                    names: Dict[str, ast.AST]) -> List[Finding]:
+        out: List[Finding] = []
+        grid_rank = _tuple_len(_kw(call, "grid"), names)
+
+        specs = list(_iter_blockspecs(_kw(call, "in_specs")))
+        out_specs = list(_iter_blockspecs(_kw(call, "out_specs")))
+        for spec in specs + out_specs:
+            shape, imap, has_ms = _blockspec_parts(spec)
+            block_rank = _tuple_len(shape, names)
+            if imap is not None and grid_rank is not None:
+                arity = _lambda_arity(imap)
+                if arity is not None and arity != grid_rank:
+                    out.append(self.finding(
+                        sf, spec, "PAL001", Severity.ERROR,
+                        f"index_map takes {arity} grid indices but the "
+                        f"grid has {grid_rank} dimensions",
+                        "one non-defaulted index_map parameter per "
+                        "grid axis (closure captures go in defaults)"))
+            if imap is not None and block_rank is not None:
+                ret = _lambda_return_rank(imap)
+                if ret is not None and ret != block_rank:
+                    out.append(self.finding(
+                        sf, spec, "PAL002", Severity.ERROR,
+                        f"index_map returns {ret} block coordinates "
+                        f"but block_shape has rank {block_rank}",
+                        "index_map must return one coordinate per "
+                        "block_shape axis"))
+            if block_rank == 1 and not has_ms:
+                out.append(self.finding(
+                    sf, spec, "PAL004", Severity.WARNING,
+                    "rank-1 BlockSpec without an explicit memory_space",
+                    "scalar/vector operands belong in SMEM "
+                    "(memory_space=pltpu.SMEM)"))
+
+        # out_specs rank / divisibility vs out_shape
+        oshape = _kw(call, "out_shape")
+        if isinstance(oshape, ast.Call) and jaxast.dotted_name(
+                oshape.func).rsplit(".", 1)[-1] == "ShapeDtypeStruct" \
+                and oshape.args:
+            dims = _literal_dims(oshape.args[0], names)
+            orank = _tuple_len(oshape.args[0], names)
+            for spec in out_specs:
+                shape, _, _ = _blockspec_parts(spec)
+                block_rank = _tuple_len(shape, names)
+                if None not in (block_rank, orank) and block_rank != orank:
+                    out.append(self.finding(
+                        sf, spec, "PAL003", Severity.ERROR,
+                        f"out_specs block rank {block_rank} != "
+                        f"out_shape rank {orank}",
+                        "block_shape must have one entry per output "
+                        "dimension"))
+                    continue
+                blocks = _literal_dims(shape, names)
+                for i, (d, bdim) in enumerate(zip(dims, blocks)):
+                    if d is not None and bdim is not None and bdim > 0 \
+                            and d % bdim != 0:
+                        out.append(self.finding(
+                            sf, spec, "PAL003", Severity.ERROR,
+                            f"out_shape dim {i} ({d}) is not divisible "
+                            f"by block dim ({bdim})",
+                            "pad to a block multiple first "
+                            "(`pad = (-n) % block`) as the other "
+                            "kernels do"))
+        return out

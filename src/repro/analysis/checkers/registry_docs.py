@@ -1,0 +1,145 @@
+"""Registry-invariant lint: the policy registry <-> docs <-> benchmark
+artifact contract, as reusable whole-repo checks.
+
+`tests/test_docs_refs.py` enforces these at import time (it loads the
+live registry); this checker re-derives the same invariants *statically*
+from `@register_policy("...")` decorator sites, so the lint CLI can run
+without importing (or even having) jax.
+
+Rules
+-----
+* ``REG001`` (error) — a registered policy has no ``### `name` `` card
+  in ``docs/baselines.md``.
+* ``REG002`` (error) — a ``docs/baselines.md`` card documents a policy
+  name that is not registered anywhere (stale doc).
+* ``REG003`` (error) — ``BENCH_policy_zoo.json``'s ``policies`` list is
+  missing a registered policy (the committed artifact predates the
+  registration; regenerate it).
+* ``REG004`` (error) — same for ``BENCH_serving.json``.
+* ``REG005`` (error) — two ``@register_policy`` sites claim the same
+  name or alias.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis import jaxast
+from repro.analysis.checkers.base import (Checker, RepoContext,
+                                          register_checker)
+from repro.analysis.findings import Finding, Severity
+
+CARD_RE = re.compile(r"^###\s+`([^`]+)`", re.MULTILINE)
+
+#: Artifacts whose ``policies`` key must cover the registry.
+ARTIFACTS = (("BENCH_policy_zoo.json", "REG003"),
+             ("BENCH_serving.json", "REG004"))
+
+
+def _registrations(ctx: RepoContext) -> List[Tuple[str, Tuple[str, ...],
+                                                   str, int]]:
+    """(name, aliases, rel path, line) per @register_policy site."""
+    regs = []
+    for sf in ctx.files:
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call) and jaxast.dotted_name(
+                    node.func).rsplit(".", 1)[-1] == "register_policy"):
+                continue
+            if not (node.args and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            aliases: Tuple[str, ...] = ()
+            for kw in node.keywords:
+                if kw.arg == "aliases" and isinstance(
+                        kw.value, (ast.Tuple, ast.List)):
+                    aliases = tuple(
+                        e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str))
+            regs.append((node.args[0].value, aliases, sf.rel,
+                         node.lineno))
+    return regs
+
+
+@register_checker
+class RegistryDocsChecker(Checker):
+    name = "registry-docs"
+    description = ("every register_policy name has a baselines.md card "
+                   "and appears in the committed benchmark artifacts")
+
+    def check_repo(self, ctx: RepoContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        regs = _registrations(ctx)
+        if not regs:
+            return out
+        names = {r[0] for r in regs}
+
+        # REG005: duplicate names/aliases across sites
+        claimed: Dict[str, str] = {}
+        for name, aliases, rel, line in regs:
+            for n in (name,) + aliases:
+                if n in claimed:
+                    out.append(self.repo_finding(
+                        ctx, rel, line, "REG005", Severity.ERROR,
+                        f"policy name `{n}` already registered at "
+                        f"{claimed[n]}",
+                        "pick a unique name/alias per policy"))
+                else:
+                    claimed[n] = f"{rel}:{line}"
+
+        # REG001 / REG002: docs/baselines.md cards
+        doc = ctx.root / "docs" / "baselines.md"
+        if not doc.exists():
+            out.append(self.repo_finding(
+                ctx, "docs/baselines.md", 1, "REG001", Severity.ERROR,
+                "docs/baselines.md not found; every registered policy "
+                "needs a card there",
+                "create the file with one `### `name`` card per policy"))
+        else:
+            text = doc.read_text()
+            cards = CARD_RE.findall(text)
+            for name, aliases, rel, line in regs:
+                if name not in cards:
+                    out.append(self.repo_finding(
+                        ctx, rel, line, "REG001", Severity.ERROR,
+                        f"policy `{name}` has no card in "
+                        "docs/baselines.md",
+                        f"add a `### `{name}`` section describing the "
+                        "policy and when it wins"))
+            for i, card in enumerate(cards):
+                if card not in names and all(
+                        card not in r[1] for r in regs):
+                    card_line = text[:text.index(f"### `{card}`")
+                                     ].count("\n") + 1
+                    out.append(self.repo_finding(
+                        ctx, "docs/baselines.md", card_line, "REG002",
+                        Severity.ERROR,
+                        f"docs/baselines.md documents `{card}` but no "
+                        "register_policy site defines it",
+                        "remove the stale card or register the policy"))
+
+        # REG003 / REG004: committed artifact coverage
+        for fname, rule in ARTIFACTS:
+            path = ctx.root / fname
+            if not path.exists():
+                continue  # artifact optional in stripped checkouts
+            try:
+                listed = set(json.loads(path.read_text()
+                                        ).get("policies", []))
+            except (json.JSONDecodeError, AttributeError):
+                out.append(self.repo_finding(
+                    ctx, fname, 1, rule, Severity.ERROR,
+                    f"{fname} is not valid JSON with a `policies` key",
+                    "regenerate via the benchmark's --quick mode"))
+                continue
+            for name, _aliases, rel, line in regs:
+                if name not in listed:
+                    out.append(self.repo_finding(
+                        ctx, rel, line, rule, Severity.ERROR,
+                        f"policy `{name}` missing from {fname}",
+                        "regenerate the artifact (benchmarks sweep "
+                        "available_policies() automatically)"))
+        return out

@@ -1,0 +1,202 @@
+"""RNG-discipline lint: every random stream seeded, keys never reused.
+
+Rules
+-----
+* ``RNG001`` (error) — legacy global-state ``np.random.<fn>()`` call
+  (``np.random.rand``, ``np.random.seed``, ...).  Global RNG state makes
+  benchmarks non-regenerable and leaks across modules; construct a
+  ``np.random.default_rng(seed)`` generator instead.
+* ``RNG002`` (error) — a ``jax.random.PRNGKey`` passed to more than one
+  consumer without an intervening ``split`` / ``fold_in``.  Key reuse
+  silently correlates the two draws.
+* ``RNG003`` (warning) — generator/key constructed from a literal seed
+  inside library code (``default_rng(7)``, ``PRNGKey(0)``).  Seeds must
+  flow from function arguments so callers (and the committed
+  ``BENCH_*.json`` artifacts) control determinism; deliberate constants
+  (content-hash weights, smoke-test init) are baselined with a
+  justification.
+* ``RNG004`` (error) — ``default_rng()`` / ``RandomState()`` with no
+  seed: nondeterministic by construction, never acceptable in a repo
+  whose contract is bit-identical replay.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List
+
+from repro.analysis import jaxast
+from repro.analysis.checkers.base import (Checker, SourceFile,
+                                          register_checker)
+from repro.analysis.findings import Finding, Severity
+
+#: np.random attributes that are seeded constructors, not draws.
+SEEDED_CONSTRUCTORS = frozenset({
+    "default_rng", "Generator", "SeedSequence", "PCG64", "Philox",
+    "MT19937", "BitGenerator", "RandomState",
+})
+
+#: Constructors whose literal-int first argument is a hardcoded seed.
+SEED_TAKERS = frozenset({"default_rng", "PRNGKey", "RandomState",
+                         "SeedSequence", "key"})
+
+#: Callees that *derive* a fresh key rather than consuming one.
+KEY_DERIVERS = frozenset({"split", "fold_in", "PRNGKey", "key", "clone",
+                          "wrap_key_data"})
+
+
+def _np_random_attr(func: ast.AST) -> str:
+    """'rand' for np.random.rand / numpy.random.rand, else ''."""
+    name = jaxast.dotted_name(func)
+    parts = name.split(".")
+    if len(parts) >= 3 and parts[0] in ("np", "numpy") \
+            and parts[1] == "random":
+        return parts[-1]
+    return ""
+
+
+def _last(func: ast.AST) -> str:
+    return jaxast.dotted_name(func).rsplit(".", 1)[-1]
+
+
+@register_checker
+class RngDisciplineChecker(Checker):
+    name = "rng-discipline"
+    description = ("no global np.random state, no PRNGKey reuse, "
+                   "seeds flow from arguments")
+
+    def check_file(self, sf: SourceFile) -> Iterable[Finding]:
+        out: List[Finding] = []
+
+        # ---- RNG001 / RNG003 / RNG004: single walk over all calls ----
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            attr = _np_random_attr(node.func)
+            if attr and attr not in SEEDED_CONSTRUCTORS:
+                out.append(self.finding(
+                    sf, node, "RNG001", Severity.ERROR,
+                    f"global-state np.random.{attr}() call",
+                    "construct np.random.default_rng(seed) and draw "
+                    "from it"))
+                continue
+            last = _last(node.func)
+            if last in ("default_rng", "RandomState") and not node.args \
+                    and not node.keywords:
+                out.append(self.finding(
+                    sf, node, "RNG004", Severity.ERROR,
+                    f"{last}() without a seed is nondeterministic",
+                    "pass an explicit seed threaded from the caller"))
+                continue
+            if last in SEED_TAKERS and node.args and isinstance(
+                    node.args[0], ast.Constant) and isinstance(
+                    node.args[0].value, int):
+                out.append(self.finding(
+                    sf, node, "RNG003", Severity.WARNING,
+                    f"hardcoded seed {node.args[0].value} in "
+                    f"{last}(...)",
+                    "thread the seed through a function argument "
+                    "(keep today's value as the default)"))
+
+        # ---- RNG002: key reuse, per function, statement-ordered ------
+        for fn in ast.walk(sf.tree):
+            if isinstance(fn, jaxast.FuncNode):
+                out.extend(self._check_key_reuse(sf, fn))
+        return out
+
+    def _check_key_reuse(self, sf: SourceFile,
+                         fn: ast.AST) -> List[Finding]:
+        out: List[Finding] = []
+        # name -> number of consumers since the key was (re)derived
+        keys: Dict[str, int] = {}
+
+        def key_args(call: ast.Call) -> List[str]:
+            names = []
+            if call.args and isinstance(call.args[0], ast.Name):
+                names.append(call.args[0].id)
+            for kw in call.keywords:
+                if kw.arg in ("key", "rng_key", "prng_key") and \
+                        isinstance(kw.value, ast.Name):
+                    names.append(kw.value.id)
+            return [n for n in names if n in keys]
+
+        def consume(call: ast.Call) -> None:
+            if _last(call.func) in KEY_DERIVERS:
+                return
+            for name in key_args(call):
+                keys[name] += 1
+                if keys[name] == 2:
+                    out.append(self.finding(
+                        sf, call, "RNG002", Severity.ERROR,
+                        f"PRNGKey `{name}` consumed twice "
+                        "without a split",
+                        "key, sub = jax.random.split(key) "
+                        "before the second draw"))
+
+        def scan_calls(node: ast.AST) -> None:
+            if isinstance(node, (ast.Lambda,) + jaxast.FuncNode):
+                return
+            if isinstance(node, ast.IfExp):
+                # exclusive arms: a key consumed once in *each* arm is
+                # consumed once at runtime, not twice — scan both arms
+                # from the same state and keep the per-key max
+                scan_calls(node.test)
+                before = dict(keys)
+                scan_calls(node.body)
+                after_body = dict(keys)
+                keys.clear()
+                keys.update(before)
+                scan_calls(node.orelse)
+                for name in set(after_body) | set(keys):
+                    if name in keys or name in after_body:
+                        keys[name] = max(keys.get(name, 0),
+                                         after_body.get(name, 0))
+                return
+            if isinstance(node, ast.Call):
+                consume(node)
+            for child in ast.iter_child_nodes(node):
+                scan_calls(child)
+
+        def scan(stmts: List[ast.stmt]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, jaxast.FuncNode):
+                    continue  # separate walk handles nested defs
+                if isinstance(stmt, (ast.If, ast.While)):
+                    scan_calls(stmt.test)
+                elif isinstance(stmt, ast.For):
+                    scan_calls(stmt.iter)
+                elif isinstance(stmt, ast.With):
+                    for item in stmt.items:
+                        scan_calls(item.context_expr)
+                elif not isinstance(stmt, ast.Try):
+                    scan_calls(stmt)
+                if isinstance(stmt, ast.Assign):
+                    fresh = isinstance(stmt.value, ast.Call) and \
+                        _last(stmt.value.func) in ("PRNGKey", "split",
+                                                   "fold_in", "key")
+                    for t in stmt.targets:
+                        for name in jaxast._target_names(t):
+                            if fresh:
+                                keys[name] = 0
+                            else:
+                                keys.pop(name, None)
+                if isinstance(stmt, (ast.For, ast.While)):
+                    # Loop bodies run repeatedly: scan twice so a key
+                    # consumed once per iteration still counts as reuse
+                    # (findings fire only on the 1 -> 2 transition, so
+                    # the double scan cannot duplicate them).
+                    scan(stmt.body)
+                    scan(stmt.body)
+                    scan(stmt.orelse)
+                    continue
+                for sub in (getattr(stmt, "body", None),
+                            getattr(stmt, "orelse", None),
+                            getattr(stmt, "finalbody", None)):
+                    if isinstance(sub, list):
+                        scan(sub)
+                for h in getattr(stmt, "handlers", []) or []:
+                    scan(h.body)
+
+        body = fn.body if isinstance(fn.body, list) else []
+        scan(body)
+        return out

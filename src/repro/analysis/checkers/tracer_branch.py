@@ -1,0 +1,74 @@
+"""Tracer-branch lint: Python control flow on traced values.
+
+Rules
+-----
+* ``TB101`` (error) — ``if`` / ``while`` whose test depends on a traced
+  value inside a jit / shard_map / pallas region.  Under trace this
+  raises ``TracerBoolConversionError`` (or, worse, silently bakes in
+  the tracing-time branch); use ``jnp.where`` / ``lax.cond`` /
+  ``lax.while_loop`` / ``pl.when`` instead.
+* ``TB102`` (warning) — ``assert`` on a traced value inside a traced
+  region.  Same concretization failure; use
+  ``repro.analysis.sanitizers.assert_all_finite`` (checkify-based) or
+  move the assert outside the region.
+
+Branching on *static* parameters (``static_argnames`` /
+``functools.partial``-bound, e.g. ``if causal:`` in the flash-attention
+kernel) is fine and the taint analysis proves it; so is branching on
+``.shape`` / ``.ndim`` / ``len()`` of traced arrays.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis import jaxast
+from repro.analysis.checkers.base import (Checker, SourceFile,
+                                          register_checker)
+from repro.analysis.findings import Finding, Severity
+
+
+@register_checker
+class TracerBranchChecker(Checker):
+    name = "tracer-branch"
+    description = ("Python if/while/assert on traced values inside "
+                   "jit/shard_map/pallas regions")
+
+    def check_file(self, sf: SourceFile) -> Iterable[Finding]:
+        out: List[Finding] = []
+        seen: Set[tuple] = set()
+
+        def scan_stmt(stmt: ast.stmt, tainted: Set[str],
+                      region_name: str) -> None:
+            key = None
+            if isinstance(stmt, (ast.If, ast.While)) and \
+                    jaxast.expr_is_tainted(stmt.test, tainted, None):
+                kw = "if" if isinstance(stmt, ast.If) else "while"
+                key = ("TB101", stmt.lineno, stmt.col_offset)
+                if key not in seen:
+                    seen.add(key)
+                    out.append(self.finding(
+                        sf, stmt, "TB101", Severity.ERROR,
+                        f"Python `{kw}` on a traced value inside jitted "
+                        f"`{region_name}`",
+                        "use jnp.where / lax.cond / lax.while_loop "
+                        "(pl.when inside Pallas kernels)"))
+            elif isinstance(stmt, ast.Assert) and \
+                    jaxast.expr_is_tainted(stmt.test, tainted, None):
+                key = ("TB102", stmt.lineno, stmt.col_offset)
+                if key not in seen:
+                    seen.add(key)
+                    out.append(self.finding(
+                        sf, stmt, "TB102", Severity.WARNING,
+                        f"`assert` on a traced value inside jitted "
+                        f"`{region_name}`",
+                        "use checkify via "
+                        "repro.analysis.sanitizers.assert_all_finite, "
+                        "or assert outside the traced region"))
+
+        for region in jaxast.find_traced_regions(sf.tree):
+            jaxast.walk_function_taint(
+                region.node, region.traced_params(), producer=None,
+                on_stmt=lambda s, t, r=region: scan_stmt(s, t, r.name))
+        return out

@@ -1,0 +1,141 @@
+"""repro-lint driver: collect files, run checkers, apply the baseline,
+render reports.
+
+Pure stdlib + ``ast`` — the engine never imports jax (or the repo code
+it lints), so the CI lint job is fast and dependency-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.analysis.baseline import Baseline
+from repro.analysis.checkers import CHECKERS, RepoContext, SourceFile
+from repro.analysis.findings import Finding, Severity
+
+SKIP_DIRS = frozenset({"__pycache__", ".git", ".pytest_cache",
+                       "node_modules", ".venv"})
+
+
+def collect_files(root: pathlib.Path,
+                  targets: Sequence[str]) -> List[pathlib.Path]:
+    out: List[pathlib.Path] = []
+    for target in targets:
+        path = (root / target) if not pathlib.Path(target).is_absolute() \
+            else pathlib.Path(target)
+        if path.is_file() and path.suffix == ".py":
+            out.append(path)
+        elif path.is_dir():
+            for p in sorted(path.rglob("*.py")):
+                if not SKIP_DIRS.intersection(p.parts):
+                    out.append(p)
+    # stable order, no duplicates
+    seen = set()
+    uniq = []
+    for p in out:
+        r = p.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(p)
+    return uniq
+
+
+@dataclasses.dataclass
+class Report:
+    """One analysis run's outcome."""
+
+    findings: List[Finding]              # active (non-baselined)
+    suppressed: List[Finding]
+    files_checked: int
+    checkers: List[str]
+    fail_on: Severity = Severity.WARNING
+
+    @property
+    def failing(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity >= self.fail_on]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.failing else 0
+
+    def to_json(self) -> Dict:
+        by_sev: Dict[str, int] = {}
+        for f in self.findings:
+            by_sev[f.severity.label] = by_sev.get(f.severity.label, 0) + 1
+        return {
+            "tool": "repro-lint",
+            "files_checked": self.files_checked,
+            "checkers": self.checkers,
+            "fail_on": self.fail_on.label,
+            "counts": by_sev,
+            "suppressed": len(self.suppressed),
+            "exit_code": self.exit_code,
+            "findings": [f.to_json() for f in self.findings],
+        }
+
+    def render_text(self) -> str:
+        lines: List[str] = []
+        for f in sorted(self.findings, key=Finding.sort_key):
+            lines.append(f"{f.location()}: {f.severity.label} "
+                         f"[{f.rule}] {f.message}")
+            if f.context:
+                lines.append(f"    {f.context}")
+            if f.hint:
+                lines.append(f"    hint: {f.hint}")
+        n = len(self.findings)
+        lines.append(
+            f"repro-lint: {self.files_checked} files, "
+            f"{len(self.checkers)} checkers, {n} finding"
+            f"{'s' if n != 1 else ''} "
+            f"({len(self.suppressed)} baselined)")
+        if self.failing:
+            lines.append(
+                f"FAIL: {len(self.failing)} finding(s) at or above "
+                f"{self.fail_on.label}")
+        else:
+            lines.append("OK")
+        return "\n".join(lines)
+
+
+def run_analysis(root: pathlib.Path, targets: Sequence[str],
+                 baseline: Optional[Baseline] = None,
+                 fail_on: Severity = Severity.WARNING,
+                 checkers: Optional[Iterable[str]] = None) -> Report:
+    root = root.resolve()
+    names = sorted(checkers) if checkers is not None \
+        else sorted(CHECKERS)
+    instances = [CHECKERS[n]() for n in names]
+
+    files: List[SourceFile] = []
+    findings: List[Finding] = []
+    paths = collect_files(root, targets)
+    for path in paths:
+        try:
+            files.append(SourceFile.parse(path, root))
+        except SyntaxError as exc:
+            rel = path.resolve()
+            try:
+                rel_s = rel.relative_to(root).as_posix()
+            except ValueError:
+                rel_s = rel.as_posix()
+            findings.append(Finding(
+                rule="PARSE", checker="engine", severity=Severity.ERROR,
+                path=rel_s, line=exc.lineno or 1, col=0,
+                message=f"syntax error: {exc.msg}"))
+
+    ctx = RepoContext(root=root, files=files)
+    for checker in instances:
+        for sf in files:
+            findings.extend(checker.check_file(sf))
+        findings.extend(checker.check_repo(ctx))
+
+    suppressed: List[Finding] = []
+    if baseline is not None:
+        findings, suppressed = baseline.apply(findings)
+        findings.extend(baseline.audit())
+    findings.sort(key=Finding.sort_key)
+    return Report(findings=findings, suppressed=suppressed,
+                  files_checked=len(files), checkers=names,
+                  fail_on=fail_on)

@@ -1,0 +1,79 @@
+"""Finding / severity model shared by every repro-lint checker.
+
+A `Finding` is one diagnostic anchored to a file location: the rule id
+(e.g. ``HS101``), the checker that produced it, a severity, a message,
+an optional fix hint, and the stripped source line (``context``) the
+finding sits on.  The context line — not the line *number* — is what the
+suppression baseline keys on, so baselined findings survive unrelated
+edits above them (see `repro.analysis.baseline`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict
+
+
+class Severity(enum.IntEnum):
+    """Ordered severities; the CLI fails on >= its ``--fail-on`` level.
+
+    * ``ERROR``   — breaks the repo's correctness contracts (a traced-
+      value branch, an unseeded RNG, a Pallas grid mismatch): never
+      acceptable, fix or justify in the baseline.
+    * ``WARNING`` — a hot-path hazard that is sometimes the right thing
+      (e.g. the one required device->host materialization per round):
+      fix it or baseline it with a justification.
+    * ``INFO``    — advisory; never fails the build.
+    """
+
+    INFO = 10
+    WARNING = 20
+    ERROR = 30
+
+    @property
+    def label(self) -> str:
+        return self.name.lower()
+
+    @classmethod
+    def from_label(cls, label: str) -> "Severity":
+        try:
+            return cls[label.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown severity {label!r}; expected one of "
+                f"{[s.label for s in cls]}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic at ``path:line:col``."""
+
+    rule: str                 # e.g. "HS101"
+    checker: str              # registry name of the producing checker
+    severity: Severity
+    path: str                 # repo-relative posix path
+    line: int                 # 1-based
+    col: int                  # 0-based (ast convention)
+    message: str
+    hint: str = ""            # how to fix (may be empty)
+    context: str = ""         # stripped source line (baseline key)
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "rule": self.rule,
+            "checker": self.checker,
+            "severity": self.severity.label,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "hint": self.hint,
+            "context": self.context,
+        }

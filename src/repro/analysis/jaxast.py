@@ -1,0 +1,371 @@
+"""Shared JAX-aware AST machinery for the repro-lint checkers.
+
+Two analyses every jit-related checker needs:
+
+* **Traced-region discovery** (`find_traced_regions`) — which function
+  bodies in a module are traced by `jax.jit`, `shard_map`, or
+  `pl.pallas_call`, and which of their parameters are *static* (bound
+  via ``static_argnames`` / ``static_argnums`` or pre-bound through
+  `functools.partial`).  Regions are found through decorators
+  (``@jax.jit``, ``@functools.partial(jax.jit, static_argnames=...)``)
+  and through call sites (``jax.jit(f)``, ``jax.jit(partial(f, d=D))``,
+  ``shard_map(f, ...)``, ``pl.pallas_call(kernel, ...)`` — including
+  one level of ``name = functools.partial(f, ...)`` indirection, the
+  idiom every kernel wrapper in `repro.kernels` uses).
+
+* **Taint propagation** (`walk_function_taint`) — a two-pass, statement-
+  ordered dataflow over one function body tracking which local names
+  hold traced/device values.  Taint enters through the region's traced
+  parameters (or through a configurable *producer* predicate for
+  device-value analysis outside traced regions, e.g. calls into
+  ``jnp.*`` / names bound to ``jax.jit(...)`` results) and propagates
+  through assignments.  Reading ``.shape`` / ``.ndim`` / ``.dtype`` /
+  ``.size`` or calling ``len()`` on a traced array yields a *static*
+  Python value, so those subexpressions break the taint — the reason
+  ``b, k = t.shape`` inside `repro.core.des_prework.prework` is not a
+  violation while ``if t.sum() > 0`` would be.
+
+This is a deliberately local analysis: it does not follow calls across
+functions or modules (documented limitation — see docs/analysis.md).
+It is precise enough to lint every traced region in this repo with an
+empty false-positive baseline.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
+
+#: Attribute reads that return static Python values even on tracers.
+SHAPE_BREAKERS = frozenset({"shape", "ndim", "dtype", "size"})
+
+#: Builtin calls whose results are never traced values.
+UNTRACED_CALLS = frozenset({"len", "range", "enumerate", "isinstance",
+                            "type", "zip", "sorted", "list", "tuple",
+                            "dict", "set", "str", "repr", "print"})
+
+#: Attribute-chain roots whose calls produce device values (taint
+#: sources for the device-value analysis outside traced regions).
+JAX_ROOTS = frozenset({"jax", "jnp", "lax"})
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedRegion:
+    """One function body traced by jit / shard_map / pallas_call."""
+
+    node: ast.AST                 # FunctionDef | Lambda
+    kind: str                     # "jit" | "shard_map" | "pallas"
+    static: frozenset             # parameter names NOT traced
+    name: str                     # display name ("<lambda>" for lambdas)
+
+    def traced_params(self) -> Set[str]:
+        args = self.node.args
+        names = [a.arg for a in (args.posonlyargs + args.args
+                                 + args.kwonlyargs)]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        # **kwargs of a traced function are traced pytrees too
+        if args.kwarg:
+            names.append(args.kwarg.arg)
+        return {n for n in names if n not in self.static}
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.experimental.pallas.pallas_call`` -> that string ('' if the
+    expression is not a plain Name/Attribute chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _last_component(name: str) -> str:
+    return name.rsplit(".", 1)[-1] if name else ""
+
+
+def _is_jit_callable(node: ast.AST) -> bool:
+    return _last_component(dotted_name(node)) == "jit"
+
+
+def _is_partial_callable(node: ast.AST) -> bool:
+    return _last_component(dotted_name(node)) == "partial"
+
+
+def _str_constants(node: Optional[ast.AST]) -> Set[str]:
+    """static_argnames may be one string or a tuple/list of strings."""
+    if node is None:
+        return set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+    return set()
+
+
+def _int_constants(node: Optional[ast.AST]) -> Set[int]:
+    if node is None:
+        return set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)}
+    return set()
+
+
+def _jit_static_kwargs(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names |= _str_constants(kw.value)
+        elif kw.arg == "static_argnums":
+            nums |= _int_constants(kw.value)
+    return names, nums
+
+
+def _positional_param_names(fn: ast.AST) -> List[str]:
+    args = fn.args
+    return [a.arg for a in (args.posonlyargs + args.args)]
+
+
+class _ModuleIndex:
+    """Name -> def / partial-binding lookup for one module."""
+
+    def __init__(self, tree: ast.AST):
+        self.defs: Dict[str, ast.AST] = {}
+        self.partials: Dict[str, ast.Call] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, FuncNode):
+                self.defs[node.name] = node
+            elif isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                if _is_partial_callable(node.value.func):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            self.partials[t.id] = node.value
+
+    def resolve(self, node: ast.AST) -> Tuple[Optional[ast.AST], Set[str]]:
+        """Resolve a callable expression to (func node, partial-bound
+        kwarg names), following one `functools.partial` level."""
+        if isinstance(node, ast.Lambda):
+            return node, set()
+        if isinstance(node, ast.Call) and _is_partial_callable(node.func):
+            inner, bound = self.resolve(node.args[0]) if node.args \
+                else (None, set())
+            bound |= {kw.arg for kw in node.keywords if kw.arg}
+            return inner, bound
+        name = _last_component(dotted_name(node))
+        if name in self.partials:
+            return self.resolve(self.partials[name])
+        if name in self.defs:
+            return self.defs[name], set()
+        return None, set()
+
+
+def find_traced_regions(tree: ast.AST) -> List[TracedRegion]:
+    """All jit / shard_map / pallas_call traced function bodies in one
+    module, with their static parameter sets."""
+    index = _ModuleIndex(tree)
+    regions: Dict[int, TracedRegion] = {}
+
+    def add(fn: Optional[ast.AST], kind: str, static: Set[str]) -> None:
+        if fn is None:
+            return
+        if kind == "jit":
+            # static_argnums were collected as positions; map them here
+            nums = {n for n in static if isinstance(n, int)}
+            names = {n for n in static if isinstance(n, str)}
+            pos = _positional_param_names(fn)
+            names |= {pos[i] for i in nums if 0 <= i < len(pos)}
+            static = names
+        name = getattr(fn, "name", "<lambda>")
+        regions[id(fn)] = TracedRegion(
+            node=fn, kind=kind, static=frozenset(static), name=name)
+
+    for node in ast.walk(tree):
+        # ---- decorator form --------------------------------------------
+        if isinstance(node, FuncNode):
+            for dec in node.decorator_list:
+                if _is_jit_callable(dec):
+                    add(node, "jit", set())
+                elif isinstance(dec, ast.Call):
+                    if _is_jit_callable(dec.func):
+                        names, nums = _jit_static_kwargs(dec)
+                        add(node, "jit", names | nums)
+                    elif (_is_partial_callable(dec.func) and dec.args
+                          and _is_jit_callable(dec.args[0])):
+                        names, nums = _jit_static_kwargs(dec)
+                        add(node, "jit", names | nums)
+        # ---- call-site form --------------------------------------------
+        if isinstance(node, ast.Call):
+            target = node.args[0] if node.args else None
+            callee = _last_component(dotted_name(node.func))
+            if _is_jit_callable(node.func) and target is not None:
+                fn, bound = index.resolve(target)
+                names, nums = _jit_static_kwargs(node)
+                add(fn, "jit", names | nums | bound)
+            elif callee == "shard_map" and target is not None:
+                fn, bound = index.resolve(target)
+                add(fn, "shard_map", bound)
+            elif callee == "pallas_call" and target is not None:
+                fn, bound = index.resolve(target)
+                add(fn, "pallas", bound)
+    return list(regions.values())
+
+
+# ----------------------------------------------------------------------
+# Taint propagation
+# ----------------------------------------------------------------------
+
+ProducerPred = Callable[[ast.AST], bool]
+
+
+def jax_producer(node: ast.AST) -> bool:
+    """Default device-value producer predicate: a call whose callee is an
+    attribute chain rooted at ``jax`` / ``jnp`` / ``lax``."""
+    name = dotted_name(node)
+    return bool(name) and name.split(".", 1)[0] in JAX_ROOTS
+
+
+def expr_is_tainted(node: ast.AST, tainted: Set[str],
+                    producer: Optional[ProducerPred] = None) -> bool:
+    """Does this expression (transitively) carry a traced/device value?
+
+    ``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` reads and the
+    builtins in `UNTRACED_CALLS` break the taint (their results are
+    static Python values even on tracers).
+    """
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in SHAPE_BREAKERS:
+            return False
+        return expr_is_tainted(node.value, tainted, producer)
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func)
+        if fname in UNTRACED_CALLS:
+            return False
+        if producer is not None and producer(node.func):
+            return True
+        if any(expr_is_tainted(a, tainted, producer) for a in node.args):
+            return True
+        if any(expr_is_tainted(kw.value, tainted, producer)
+               for kw in node.keywords):
+            return True
+        return expr_is_tainted(node.func, tainted, producer)
+    if isinstance(node, (ast.Constant, ast.Lambda)):
+        return False
+    return any(expr_is_tainted(c, tainted, producer)
+               for c in ast.iter_child_nodes(node)
+               if isinstance(c, ast.expr))
+
+
+def _target_names(target: ast.AST) -> Iterable[str]:
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _target_names(elt)
+    elif isinstance(target, ast.Starred):
+        yield from _target_names(target.value)
+
+
+StmtCallback = Callable[[ast.stmt, Set[str]], None]
+
+
+def walk_function_taint(fn: ast.AST, initial: Set[str],
+                        producer: Optional[ProducerPred] = None,
+                        on_stmt: Optional[StmtCallback] = None) -> Set[str]:
+    """Statement-ordered taint dataflow over one function body.
+
+    Runs two passes so loop-carried taint (a name tainted at the bottom
+    of a loop, read at the top) is visible; ``on_stmt`` fires on every
+    statement during the second pass only, with the current taint set.
+    Nested function bodies (the `pl.when`-decorated closures of the
+    Pallas kernels) are walked with the enclosing taint environment.
+    """
+    body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+    tainted = set(initial)
+
+    def walk(stmts: List[ast.stmt], report: bool) -> None:
+        for stmt in stmts:
+            if report and on_stmt is not None:
+                on_stmt(stmt, tainted)
+            if isinstance(stmt, ast.Assign):
+                is_t = expr_is_tainted(stmt.value, tainted, producer)
+                for t in stmt.targets:
+                    for name in _target_names(t):
+                        (tainted.add if is_t
+                         else tainted.discard)(name)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                is_t = expr_is_tainted(stmt.value, tainted, producer)
+                for name in _target_names(stmt.target):
+                    (tainted.add if is_t else tainted.discard)(name)
+            elif isinstance(stmt, ast.AugAssign):
+                if expr_is_tainted(stmt.value, tainted, producer):
+                    tainted.update(_target_names(stmt.target))
+            elif isinstance(stmt, ast.For):
+                if expr_is_tainted(stmt.iter, tainted, producer):
+                    tainted.update(_target_names(stmt.target))
+                walk(stmt.body, report)
+                walk(stmt.orelse, report)
+                continue
+            elif isinstance(stmt, (ast.If, ast.While)):
+                walk(stmt.body, report)
+                walk(stmt.orelse, report)
+                continue
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    if item.optional_vars is not None and expr_is_tainted(
+                            item.context_expr, tainted, producer):
+                        tainted.update(_target_names(item.optional_vars))
+                walk(stmt.body, report)
+                continue
+            elif isinstance(stmt, ast.Try):
+                walk(stmt.body, report)
+                for h in stmt.handlers:
+                    walk(h.body, report)
+                walk(stmt.orelse, report)
+                walk(stmt.finalbody, report)
+                continue
+            elif isinstance(stmt, FuncNode):
+                # nested closure (e.g. @pl.when body): parameters shadow
+                inner = {a.arg for a in stmt.args.args}
+                saved = tainted & inner
+                tainted.difference_update(inner)
+                walk(stmt.body, report)
+                tainted.update(saved)
+                continue
+    walk(body, report=False)
+    if on_stmt is not None:
+        # Second pass starts from the first pass's final taint (plus the
+        # seeds), so loop-carried taint — a name tainted at the bottom of
+        # a loop body, branched on at the top — is visible when the
+        # callback fires.  Re-binding to an untainted value still clears
+        # taint flow-sensitively as the pass proceeds.
+        tainted.update(initial)
+        walk(body, report=True)
+    return tainted
+
+
+def calls_in(node: ast.AST) -> Iterable[ast.Call]:
+    """Every Call expression inside one statement, excluding those in
+    nested function bodies (the outer walk visits them separately)."""
+    stack = [node]
+    while stack:
+        cur = stack.pop()
+        for child in ast.iter_child_nodes(cur):
+            if isinstance(child, FuncNode) or isinstance(child, ast.Lambda):
+                continue
+            if isinstance(child, ast.Call):
+                yield child
+            stack.append(child)

@@ -61,6 +61,15 @@ class ScheduleContext:
     s0: float = 8192.0                       # hidden-state bytes
     p0: float = 1e-2                         # per-subcarrier tx power P0
     rng: Optional[np.random.Generator] = None
+    debug_checks: bool = False               # opt-in numeric sanitizers
+
+    def check_finite(self, value, name: str) -> None:
+        """Policies call this on their inputs/outputs; a no-op unless
+        the context was built with ``debug_checks=True`` (see
+        `repro.analysis.sanitizers.assert_all_finite`)."""
+        if self.debug_checks:
+            from repro.analysis.sanitizers import assert_all_finite
+            assert_all_finite(value, name)
 
     def __post_init__(self):
         if self.comp_coeff is None:

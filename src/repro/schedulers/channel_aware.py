@@ -127,7 +127,9 @@ class ChannelAwarePolicy(SchedulerPolicy):
 
         k_sel = min(self.top_k if self.top_k is not None else ctx.top_k,
                     ctx.max_experts)  # C2 budget caps the fused Top-k
+        ctx.check_finite(ctx.gate_scores, "gate_scores")
         feat = csi_features(ctx.rates)  # (K, E): per-source features
+        ctx.check_finite(feat, "csi_features")
         mask = channel_aware_mask(
             jnp.asarray(ctx.gate_scores, dtype=jnp.float32),
             jnp.asarray(feat, dtype=jnp.float32)[:, None, :],

@@ -74,6 +74,7 @@ class GreedyDESPolicy(SchedulerPolicy):
 
         d = self.max_experts if self.max_experts is not None else ctx.max_experts
         qos = self.effective_qos(ctx)
+        ctx.check_finite(ctx.gate_scores, "gate_scores")
         # Cost estimate under the per-link best subcarrier (the beta-step
         # then reallocates optimally for the realized traffic).
         beta0 = best_subcarrier_beta(ctx.rates)
@@ -92,6 +93,7 @@ class GreedyDESPolicy(SchedulerPolicy):
 
         beta = _allocate_beta(alpha, ctx, self.beta_method)
         obj = _round_energy(alpha, beta, ctx)
+        ctx.check_finite(beta, "beta")
         return RoundSchedule(
             layer=ctx.layer, alpha=alpha, beta=beta, qos=qos,
             policy=self.name, energy=obj, energy_trace=[obj],

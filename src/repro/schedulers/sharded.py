@@ -79,7 +79,7 @@ def _sharded_prework_fn(mesh, max_experts: int):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.core import des_prework
+    from repro.core import des_prework as des_prework_lib
     from repro.distributed.sharding import BATCH_AXIS
 
     row = P(BATCH_AXIS)
@@ -88,9 +88,15 @@ def _sharded_prework_fn(mesh, max_experts: int):
         "infeasible": row, "all_unreachable": row, "fallback_sel": mat,
         "easy": row, "easy_sel": mat, "seed_energy": row, "root_bound": row,
     }
-    fn = shard_map(
-        functools.partial(des_prework.prework, max_experts=max_experts),
-        mesh=mesh, in_specs=(mat, mat, row, mat), out_specs=out_specs)
+    # named wrapper (not a bare functools.partial) so the compilation
+    # shows up as `des_prework` in jax_log_compiles output — the
+    # recompile gate in tests/test_recompile_gate.py counts it by name
+    def des_prework(scores, costs, qos, forced):
+        return des_prework_lib.prework(scores, costs, qos, forced,
+                                       max_experts=max_experts)
+
+    fn = shard_map(des_prework, mesh=mesh,
+                   in_specs=(mat, mat, row, mat), out_specs=out_specs)
     return jax.jit(fn)
 
 

@@ -279,6 +279,7 @@ class SiftMoEPolicy(SchedulerPolicy):
         d = (self.max_experts if self.max_experts is not None
              else ctx.max_experts)
         qos = self.effective_qos(ctx)
+        ctx.check_finite(ctx.gate_scores, "gate_scores")
         # Energy pricing under the per-link best subcarrier (the
         # beta-step then reallocates optimally for the realized traffic).
         beta0 = best_subcarrier_beta(ctx.rates)

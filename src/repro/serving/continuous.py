@@ -125,6 +125,9 @@ class ContinuousEngine:
                 continue
             logits, caches = self._decode(self.params, tok, caches)
             new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # one batched host copy per step, after the decode above is
+            # already dispatched — not one int(tok[s]) sync per slot
+            tok_host = np.asarray(tok)
             stats.decode_steps += 1
             stats.occupancy_sum += n_live
             for s in range(self.slots):
@@ -132,7 +135,7 @@ class ContinuousEngine:
                 if req is None:
                     continue
                 pos = req.max_new_tokens - remaining[s]
-                req.output[pos] = int(tok[s])
+                req.output[pos] = int(tok_host[s])
                 remaining[s] -= 1
                 stats.decode_tokens += 1
                 if remaining[s] == 0:

@@ -220,6 +220,7 @@ class FrontendConfig:
     renormalize_qos: bool = True      # scale C1 by live gate mass
     seed: int = 0
     record_trace: bool = False
+    debug_checks: bool = False        # ScheduleContext numeric sanitizers
 
 
 # ----------------------------------------------------------------------
@@ -461,7 +462,8 @@ class ServingFrontend:
             qos=q_eff, qos_schedule=self.qos_schedule,
             max_experts=cfg.max_experts, top_k=cfg.top_k,
             comp_coeff=self.comp_coeff, s0=self.s0,
-            p0=self.channel_cfg.tx_power_w, rng=rng)
+            p0=self.channel_cfg.tx_power_w, rng=rng,
+            debug_checks=cfg.debug_checks)
         t_sched = time.perf_counter()
         rs = self.policy.schedule(ctx)
         report.sched_wall_s += time.perf_counter() - t_sched
@@ -487,7 +489,10 @@ class ServingFrontend:
         report.comm_energy_j += acct.comm_energy_j
         report.comp_energy_j += acct.comp_energy_j
         report.des_nodes += rs.des_nodes
-        dt = self.round_time_s(alpha, rs.beta, masked_rates)
+        # reuse the fallback beta computed above instead of letting
+        # round_time_s re-derive it (identical: both come from
+        # _fallback_beta(masked_rates) when the policy returned none)
+        dt = self.round_time_s(alpha, beta, masked_rates)
         if cfg.record_trace:
             report.trace.append(RoundRecord(
                 iteration=report.iterations, layer=layer, qos=q_eff,

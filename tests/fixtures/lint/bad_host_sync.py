@@ -1,0 +1,19 @@
+"""Known-bad fixture for the host-sync checker (never imported)."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def traced_syncs(x):
+    a = x.item()                     # HS101: .item() under trace
+    b = np.asarray(x)                # HS101: np.asarray under trace
+    c = float(x)                     # HS102: float() on traced value
+    return a, b, c
+
+
+def round_step(gates):
+    mask = channel_aware_mask(gates, None, 0.4, 2)  # noqa: F821
+    alpha = np.asarray(mask)         # HS103: device value materialized
+    vals = mask.tolist()             # HS103: per-element sync
+    return alpha, vals

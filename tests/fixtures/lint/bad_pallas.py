@@ -1,0 +1,34 @@
+"""Known-bad fixture for the pallas-kernel checker (never imported)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    grid = (2, 4)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i: (i, 0)),    # PAL001: arity 1 != grid 2
+            pl.BlockSpec((8, 8), lambda i, j: (i,)),   # PAL002: returns 1 coord
+            pl.BlockSpec((8,), lambda i, j: (0,)),     # PAL004: no memory_space
+        ],
+        out_specs=pl.BlockSpec((8, 4), lambda i, j: (i, j)),  # PAL003: 12 % 8
+        out_shape=jax.ShapeDtypeStruct((12, 8), jnp.float32),
+    )(x)
+
+
+def run_rank(x):
+    return pl.pallas_call(
+        kernel,
+        grid=(2,),
+        out_specs=pl.BlockSpec((8,), lambda i: (i,),
+                               memory_space="smem"),  # PAL003: rank 1 != 2
+        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+    )(x)

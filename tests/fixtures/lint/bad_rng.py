@@ -1,0 +1,13 @@
+"""Known-bad fixture for the rng-discipline checker (never imported)."""
+
+import jax
+import numpy as np
+
+
+def sloppy_draws(n):
+    vals = np.random.rand(n)             # RNG001: global np.random state
+    rng = np.random.default_rng()        # RNG004: unseeded generator
+    key = jax.random.PRNGKey(0)          # RNG003: hardcoded seed
+    a = jax.random.normal(key, (n,))
+    b = jax.random.uniform(key, (n,))    # RNG002: key consumed twice
+    return vals, rng, a, b

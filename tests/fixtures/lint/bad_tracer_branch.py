@@ -1,0 +1,13 @@
+"""Known-bad fixture for the tracer-branch checker (never imported)."""
+
+import jax
+
+
+@jax.jit
+def branchy(x):
+    if x.sum() > 0:                  # TB101: if on traced value
+        x = x * 2
+    while x[0] > 0:                  # TB101: while on traced value
+        x = x - 1
+    assert x[0] >= 0                 # TB102: assert on traced value
+    return x

@@ -1,0 +1,24 @@
+"""Known-good fixture for the pallas-kernel checker (never imported)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def kernel(n_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x, n):
+    grid = (2, 2)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((16, 16), jnp.float32),
+    )(n, x)

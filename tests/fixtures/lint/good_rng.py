@@ -1,0 +1,13 @@
+"""Known-good fixture for the rng-discipline checker (never imported)."""
+
+import jax
+import numpy as np
+
+
+def disciplined_draws(n, seed=0):
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (n,))
+    b = jax.random.uniform(k2, (n,))
+    return rng.standard_normal(n), a, b

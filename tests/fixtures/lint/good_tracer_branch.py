@@ -1,0 +1,15 @@
+"""Known-good fixture for the tracer-branch checker (never imported)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def static_branches(x, causal):
+    if causal:                       # static argument: fine
+        x = x + 1.0
+    if x.ndim == 2:                  # shape metadata: fine
+        x = x.sum(-1)
+    return jnp.where(x > 0, x, 0.0)  # traced select spelled correctly

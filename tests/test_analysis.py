@@ -1,0 +1,234 @@
+"""repro-lint (repro.analysis) — checker fixtures, baseline round-trip,
+CLI smoke, and the repo-clean gate.
+
+Each checker has a known-bad / known-good fixture pair under
+``tests/fixtures/lint/``; the per-checker tests assert the *exact*
+(rule, severity, line) set, so they fail both when a checker is deleted
+(``run_analysis(checkers=[name])`` raises ``KeyError``) and when its
+sensitivity drifts.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (CHECKERS, Baseline, Finding, Severity,
+                            available_checkers, run_analysis)
+from repro.analysis.baseline import DEFAULT_BASELINE_NAME, BaselineEntry
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = "tests/fixtures/lint"
+
+EXPECTED_CHECKERS = ("host-sync", "pallas-kernel", "registry-docs",
+                     "rng-discipline", "tracer-branch")
+
+
+def _fixture_findings(checker):
+    rep = run_analysis(REPO_ROOT, [FIXTURES], checkers=[checker])
+    return rep.findings
+
+
+def _by_file(findings, name):
+    return [(f.rule, f.severity.label, f.line)
+            for f in findings if f.path.endswith(name)]
+
+
+# ----------------------------------------------------------------------
+# registry + per-checker exactness
+# ----------------------------------------------------------------------
+
+def test_all_checkers_registered():
+    assert set(EXPECTED_CHECKERS) <= set(CHECKERS)
+    assert available_checkers() == sorted(CHECKERS)
+    for name in EXPECTED_CHECKERS:
+        assert CHECKERS[name].description
+
+
+def test_host_sync_checker_exact():
+    fs = _fixture_findings("host-sync")
+    assert _by_file(fs, "bad_host_sync.py") == [
+        ("HS101", "error", 9),       # .item() under trace
+        ("HS101", "error", 10),      # np.asarray under trace
+        ("HS102", "warning", 11),    # float() on traced value
+        ("HS103", "warning", 17),    # np.asarray of a mask-producer value
+        ("HS103", "warning", 18),    # .tolist() of the same
+    ]
+    assert _by_file(fs, "good_host_sync.py") == []
+
+
+def test_tracer_branch_checker_exact():
+    fs = _fixture_findings("tracer-branch")
+    assert _by_file(fs, "bad_tracer_branch.py") == [
+        ("TB101", "error", 8),       # if on traced value
+        ("TB101", "error", 10),      # while on traced value
+        ("TB102", "warning", 12),    # assert on traced value
+    ]
+    assert _by_file(fs, "good_tracer_branch.py") == []
+
+
+def test_rng_discipline_checker_exact():
+    fs = _fixture_findings("rng-discipline")
+    assert _by_file(fs, "bad_rng.py") == [
+        ("RNG001", "error", 8),      # np.random.rand global state
+        ("RNG004", "error", 9),      # unseeded default_rng()
+        ("RNG003", "warning", 10),   # hardcoded PRNGKey seed
+        ("RNG002", "error", 12),     # key consumed twice, no split
+    ]
+    assert _by_file(fs, "good_rng.py") == []
+
+
+def test_pallas_kernel_checker_exact():
+    fs = _fixture_findings("pallas-kernel")
+    assert _by_file(fs, "bad_pallas.py") == [
+        ("PAL001", "error", 18),     # index_map arity != grid rank
+        ("PAL002", "error", 19),     # index_map return rank != block rank
+        ("PAL004", "warning", 20),   # rank-1 spec without memory_space
+        ("PAL003", "error", 22),     # 12 not divisible by block 8
+        ("PAL003", "error", 31),     # out block rank 1 != out_shape rank 2
+    ]
+    assert _by_file(fs, "good_pallas.py") == []
+
+
+def test_registry_docs_checker_exact(tmp_path):
+    (tmp_path / "policies.py").write_text(
+        'from repro.schedulers import register_policy\n'
+        'register_policy("foo", aliases=("f",))(object)\n'     # line 2
+        'register_policy("bar")(object)\n'                     # line 3
+        'register_policy("foo")(object)\n')                    # line 4
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "baselines.md").write_text(
+        "# Baselines\n\n### `foo`\n\nok\n\n### `ghost`\n\nstale\n")
+    (tmp_path / "BENCH_policy_zoo.json").write_text(
+        json.dumps({"policies": ["foo"]}))
+
+    rep = run_analysis(tmp_path, ["policies.py"],
+                       checkers=["registry-docs"])
+    got = [(f.rule, f.path, f.line) for f in rep.findings]
+    assert ("REG005", "policies.py", 4) in got       # duplicate `foo`
+    assert ("REG001", "policies.py", 3) in got       # `bar` has no card
+    assert ("REG002", "docs/baselines.md", 7) in got  # `ghost` is stale
+    assert ("REG003", "policies.py", 3) in got       # `bar` not in artifact
+    assert len(got) == 4
+    assert all(f.severity is Severity.ERROR for f in rep.findings)
+
+
+def test_good_fixtures_are_fully_clean():
+    rep = run_analysis(REPO_ROOT, [FIXTURES])
+    assert not [f for f in rep.findings if "good_" in f.path]
+
+
+# ----------------------------------------------------------------------
+# baseline round-trip
+# ----------------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    rep = run_analysis(REPO_ROOT, [FIXTURES], checkers=["tracer-branch"])
+    assert rep.exit_code == 1 and len(rep.findings) == 3
+
+    # suppress: baseline every finding (with justifications) -> clean
+    bl = Baseline(path=tmp_path / DEFAULT_BASELINE_NAME)
+    assert bl.extend_from(rep.findings, justification="fixture") == 3
+    bl.save()
+
+    bl2 = Baseline.load(bl.path)
+    rep2 = run_analysis(REPO_ROOT, [FIXTURES], baseline=bl2,
+                        checkers=["tracer-branch"])
+    assert rep2.exit_code == 0
+    assert rep2.findings == [] and len(rep2.suppressed) == 3
+
+    # unsuppress one entry -> dirty again, with exactly that finding back
+    bl3 = Baseline.load(bl.path)
+    dropped = bl3.entries.pop(0)
+    rep3 = run_analysis(REPO_ROOT, [FIXTURES], baseline=bl3,
+                        checkers=["tracer-branch"])
+    assert rep3.exit_code == 1
+    assert [(f.rule, f.context) for f in rep3.findings] == \
+        [(dropped.rule, dropped.context)]
+
+
+def test_baseline_audit_stale_and_unjustified(tmp_path):
+    bl = Baseline(path=tmp_path / DEFAULT_BASELINE_NAME, entries=[
+        BaselineEntry(rule="TB101", path="nowhere.py",
+                      context="if gone:", justification="was fixed"),
+        BaselineEntry(rule="HS103", path="also/nowhere.py",
+                      context="np.asarray(x)", justification=""),
+    ])
+    rep = run_analysis(REPO_ROOT, [f"{FIXTURES}/good_rng.py"],
+                       baseline=bl)
+    rules = sorted(f.rule for f in rep.findings)
+    # both entries are stale (BASE001); the second also lacks a
+    # justification (BASE002)
+    assert rules == ["BASE001", "BASE001", "BASE002"]
+    assert rep.exit_code == 1
+
+
+def test_baseline_matching_survives_line_drift():
+    # keys are (rule, path, stripped line), not line numbers
+    f = Finding(rule="TB101", checker="tracer-branch",
+                severity=Severity.ERROR, path="a.py", line=8, col=4,
+                message="m", context="if x.sum() > 0:")
+    bl = Baseline(path=pathlib.Path("unused.json"), entries=[
+        BaselineEntry(rule="TB101", path="a.py",
+                      context="if x.sum() > 0:", justification="j")])
+    moved = Finding(**{**f.__dict__, "line": 80})
+    active, suppressed = bl.apply([moved])
+    assert active == [] and suppressed == [moved]
+
+
+# ----------------------------------------------------------------------
+# CLI + repo-clean gate
+# ----------------------------------------------------------------------
+
+def test_cli_json_output(tmp_path):
+    out = tmp_path / "lint_report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", FIXTURES,
+         "--no-baseline", "--format", "json", "--out", str(out)],
+        cwd=REPO_ROOT, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1          # fixtures are deliberately dirty
+    data = json.loads(out.read_text())
+    assert data["tool"] == "repro-lint"
+    assert data["exit_code"] == 1
+    assert data["checkers"] == list(EXPECTED_CHECKERS)
+    rules = {f["rule"] for f in data["findings"]}
+    assert {"HS101", "TB101", "RNG002", "PAL001"} <= rules
+    # stdout carries the same report
+    assert json.loads(proc.stdout)["counts"] == data["counts"]
+
+
+def test_cli_list_checkers():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-checkers"],
+        cwd=REPO_ROOT, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0
+    for name in EXPECTED_CHECKERS:
+        assert name in proc.stdout
+
+
+def test_repo_is_lint_clean_under_committed_baseline():
+    """The CI gate: src + benchmarks produce zero non-baselined
+    findings, and every baseline entry still matches and is justified."""
+    bl = Baseline.load(REPO_ROOT / DEFAULT_BASELINE_NAME)
+    assert bl.entries, "committed baseline should exist and be non-empty"
+    rep = run_analysis(REPO_ROOT, ["src", "benchmarks"], baseline=bl)
+    assert rep.findings == [], rep.render_text()
+    assert rep.exit_code == 0
+    assert all(e.justification.strip() for e in bl.entries)
+
+
+def test_engine_reports_syntax_errors(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n")
+    rep = run_analysis(tmp_path, ["broken.py"])
+    assert [(f.rule, f.severity.label) for f in rep.findings] == \
+        [("PARSE", "error")]
+    assert rep.exit_code == 1
+
+
+def test_unknown_checker_name_raises():
+    with pytest.raises(KeyError):
+        run_analysis(REPO_ROOT, [FIXTURES], checkers=["no-such-checker"])

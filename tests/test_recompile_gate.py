@@ -1,0 +1,179 @@
+"""Recompile-count regression gate (repro.analysis.sanitizers).
+
+The serving hot path must not recompile per round: with stable gate
+shapes (``n_prefill_rows=1`` pins the prefill row cap) each jitted
+policy entry point — the channel-aware ``channel_aware_mask``, the
+siftmoe ``route_mask`` twin ``siftmoe_mask``, and the sharded DES
+pre-work behind ``des_select_batch``'s device tier — must compile
+exactly once across a multi-round `ServingFrontend` run.
+
+These tests would have caught the classic regression: a policy whose
+mask shape depends on the number of live slots silently recompiles
+every admission wave.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizers import (RecompileError, assert_all_finite,
+                                       debug_nan_guard, recompile_guard)
+from repro.data.tasks import mixed_cost_pool
+from repro.serving.frontend import FrontendConfig, ServingFrontend
+from repro.serving.workload import (QoSClass, WorkloadConfig,
+                                    generate_workload)
+
+K = 6
+
+#: one class with a fixed token budget, so every request decodes the
+#: same number of iterations and the live-slot count stays constant
+FIXED_CLASS = (QoSClass("fixed", 50.0, 50.0, 3, 3, 1.0),)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return mixed_cost_pool(k=K, num_domains=3)
+
+
+def _steady_workload():
+    """K equal-budget requests all arriving at t=0: every slot fills in
+    the first admission wave and stays live to the end, so the per-round
+    instance batch shape never changes."""
+    reqs = generate_workload(WorkloadConfig(
+        num_requests=K, rate_hz=1000.0, prompt_tokens=(4, 4),
+        classes=FIXED_CLASS, seed=11))
+    for r in reqs:
+        r.arrive_s = 0.0
+    return reqs
+
+
+def _cfg():
+    return FrontendConfig(num_layers=3, n_prefill_rows=1, seed=5)
+
+
+# ----------------------------------------------------------------------
+# the gate: one compile per jitted entry point per serving run
+# ----------------------------------------------------------------------
+
+def test_channel_aware_mask_compiles_once_across_run(pool):
+    jax.clear_caches()
+    with recompile_guard(expect={"channel_aware_mask": 1}) as log:
+        rep = ServingFrontend(policy="channel-aware", pool=pool,
+                              cfg=_cfg()).serve(_steady_workload())
+    assert rep.rounds >= 2 * 3          # multi-round, multi-iteration
+    assert log.count("channel_aware_mask") == 1
+
+
+def test_sharded_des_prework_compiles_once_across_run(pool):
+    # the device tier of des_select_batch: jit(shard_map(des_prework))
+    jax.clear_caches()
+    with recompile_guard(expect={"des_prework": 1}) as log:
+        rep = ServingFrontend(policy="sharded-des", pool=pool,
+                              cfg=_cfg()).serve(_steady_workload())
+    assert rep.rounds >= 2 * 3
+    assert log.count("des_prework") == 1
+
+
+def test_siftmoe_route_mask_compiles_once_across_rounds():
+    from repro.schedulers.siftmoe import siftmoe_mask
+
+    fn = jax.jit(siftmoe_mask,
+                 static_argnames=("max_experts", "threshold", "method"))
+    rng = np.random.default_rng(0)
+    jax.clear_caches()
+    with recompile_guard(expect={"siftmoe_mask": 1}):
+        for _ in range(5):      # five rounds, same shapes -> one compile
+            g = jnp.asarray(rng.dirichlet(np.ones(K), size=(K,)),
+                            jnp.float32)
+            fn(g, None, 0.4, 2).block_until_ready()
+
+
+# ----------------------------------------------------------------------
+# the guard itself
+# ----------------------------------------------------------------------
+
+def test_guard_counts_shape_driven_recompiles():
+    @jax.jit
+    def double_it(x):
+        return x * 2
+
+    jax.clear_caches()
+    with recompile_guard() as log:
+        double_it(jnp.ones((4,))).block_until_ready()
+        double_it(jnp.ones((4,))).block_until_ready()   # cache hit
+        double_it(jnp.ones((8,))).block_until_ready()   # new shape
+    assert log.count("double_it") == 2
+
+
+def test_guard_raises_on_unexpected_recompile():
+    @jax.jit
+    def triple_it(x):
+        return x * 3
+
+    jax.clear_caches()
+    with pytest.raises(RecompileError, match="triple_it"):
+        with recompile_guard(expect={"triple_it": 1}):
+            triple_it(jnp.ones((4,))).block_until_ready()
+            triple_it(jnp.ones((8,))).block_until_ready()
+
+
+def test_guard_ignores_unlisted_ambient_compiles():
+    jax.clear_caches()
+    with recompile_guard(expect={}) as log:
+        # eager ops compile (convert_element_type etc.) but the guard
+        # only asserts over names it was given
+        _ = jnp.ones((3,)) + 1.0
+    assert log.counts is not None
+
+
+def test_guard_restores_config():
+    prev = jax.config.jax_log_compiles
+    with recompile_guard():
+        assert jax.config.jax_log_compiles
+    assert jax.config.jax_log_compiles == prev
+
+
+# ----------------------------------------------------------------------
+# numeric sanitizers + the ScheduleContext debug_checks opt-in
+# ----------------------------------------------------------------------
+
+def test_assert_all_finite_passes_and_raises():
+    assert_all_finite({"a": np.ones(3), "b": jnp.zeros(2)}, "clean")
+    with pytest.raises(FloatingPointError, match="gates"):
+        assert_all_finite(np.array([1.0, np.nan]), "gates")
+    with pytest.raises(FloatingPointError, match="rates"):
+        assert_all_finite([np.ones(2), np.array([np.inf])], "rates")
+    # integer arrays are never non-finite
+    assert_all_finite(np.arange(4), "ints")
+
+
+def test_debug_nan_guard_scopes_the_flag():
+    prev = jax.config.jax_debug_nans
+    with debug_nan_guard():
+        assert jax.config.jax_debug_nans
+    assert jax.config.jax_debug_nans == prev
+
+
+def test_frontend_debug_checks_flag_reaches_policies(pool):
+    cfg = FrontendConfig(num_layers=2, n_prefill_rows=1, seed=5,
+                         debug_checks=True)
+    rep = ServingFrontend(policy="des-greedy", pool=pool,
+                          cfg=cfg).serve(_steady_workload())
+    assert rep.completed == K           # clean inputs: checks all pass
+
+
+def test_schedule_context_check_finite_raises_on_nan(pool):
+    from repro.schedulers import ScheduleContext, get_policy
+
+    gates = np.zeros((K, 1, K))
+    gates[:, 0, 0] = np.nan
+    rates = np.ones((K, K, 8))
+    ctx = ScheduleContext(gate_scores=gates, rates=rates, qos=0.4,
+                          debug_checks=True)
+    with pytest.raises(FloatingPointError):
+        get_policy("des-greedy").schedule(ctx)
+    # same inputs without the opt-in: no check, no raise
+    ctx2 = ScheduleContext(gate_scores=np.abs(np.nan_to_num(gates)),
+                           rates=rates, qos=0.4)
+    get_policy("des-greedy").schedule(ctx2)
