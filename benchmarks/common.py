@@ -60,14 +60,25 @@ def schedule_query(
     seed: int = 0,
     homogeneous_z: float = 0.5,
     policy_kwargs: Optional[Dict] = None,
+    channel_process=None,
+    comp_coeff: Optional[np.ndarray] = None,
 ) -> QueryResult:
     k = pool.num_experts
     rng = np.random.default_rng(seed)
     ccfg = channel_lib.ChannelConfig(
         num_experts=k, num_subcarriers=max(num_subcarriers, k * (k - 1)))
-    gains = channel_lib.sample_channel_gains(ccfg, rng)
-    rates = channel_lib.subcarrier_rates(ccfg, gains)
-    comp = energy_lib.make_comp_coeffs(k)
+    # Scenario hooks (`repro.scenarios`): a temporal channel process
+    # steps the gains once per layer (the default draws ONE static
+    # channel per query), and heterogeneous compute coefficients replace
+    # the rank ladder.  None/None keeps the historical path bit for bit.
+    if channel_process is not None:
+        channel_process.reset()
+        rates = None
+    else:
+        gains = channel_lib.sample_channel_gains(ccfg, rng)
+        rates = channel_lib.subcarrier_rates(ccfg, gains)
+    comp = (np.asarray(comp_coeff, dtype=np.float64)
+            if comp_coeff is not None else energy_lib.make_comp_coeffs(k))
     s0, p0 = 8192.0, ccfg.tx_power_w
 
     # source node: the expert holding the query (paper: one query/node).
@@ -84,6 +95,9 @@ def schedule_query(
     nodes_total = 0
 
     for layer in range(1, num_layers + 1):
+        if channel_process is not None:
+            gains = channel_process.step(rng)
+            rates = channel_lib.subcarrier_rates(ccfg, gains)
         g_src = pool.gate_scores(domain, n_tokens, rng)     # (N, K)
         gates = np.zeros((k, n_tokens, k))
         gates[src] = g_src

@@ -16,23 +16,27 @@ existing `ScheduleContext` fields, with zero consumer changes.
 
 The HARD GATE: the exact-DES family (jesa + its sharded/async/multihost
 tiers) must Pareto-dominate the ported baselines — for every
-channel-aware and siftmoe point there must be an exact-DES point with
-no more energy (2% tolerance) and no less accuracy (0.75 pt tolerance,
-the fig10 noise margins).  A registered policy missing from the knob
-table still runs (one default point), so the sweep can never silently
-skip a policy.
+channel-aware, siftmoe, and Top-1 (topk k=1) point there must be an
+exact-DES point with no more energy (2% tolerance) and no less accuracy
+(0.75 pt tolerance, the fig10 noise margins).  A registered policy
+missing from the knob table still runs (one default point), so the
+sweep can never silently skip a policy.
 
 CLI::
 
     PYTHONPATH=src python -m benchmarks.policy_zoo [--quick]
-        [--out BENCH_policy_zoo.json]
+        [--out BENCH_policy_zoo.json] [--scenario NAME]
 
 writes ``BENCH_policy_zoo.json`` (per-point energy/accuracy rows +
 dominance claims; a CI artifact next to the DES benchmarks) and exits
 non-zero if the dominance gate fails.  ``--quick`` trims only the
 gate-irrelevant grid (des-greedy), so every gate claim — including the
 restated homogeneous one — is evaluated on the same points in both
-modes.
+modes.  ``--scenario`` reruns the sweep under any registered
+`repro.scenarios` regime (pool, channel process, compute coefficients);
+the default ``fig10-static`` is bit-identical to the historical sweep,
+and the dominance gate is only *enforced* (exit status) there — the
+tolerances are fig10 noise margins, not universal constants.
 """
 
 from __future__ import annotations
@@ -42,13 +46,15 @@ import json
 import time
 
 from benchmarks.common import avg_queries
-from repro.data.tasks import mixed_cost_pool
+from repro.core import channel as channel_lib
+from repro.scenarios import canonical_scenario_name, get_scenario
 from repro.schedulers import available_policies
 
 LAYERS = 32
 N_TOKENS = 12
 N_QUERIES = 3
 DOMAINS = [0, 1, 2]
+NOMINAL_ROUND_S = 0.1   # per-layer step of a scenario channel process
 
 # Exact-DES family (the paper's technique and its bit-identical scaling
 # tiers) vs the ported external baselines the gate compares against.
@@ -112,17 +118,29 @@ def _dominates(des_pts, base_pts):
 
 
 def run_zoo(quick: bool = False, out_path: str | None = None,
-            verbose: bool = True) -> dict:
-    pool = mixed_cost_pool(k=8, num_domains=len(DOMAINS))
+            verbose: bool = True, scenario: str = "fig10-static") -> dict:
+    # Scenario routing: pool / channel process / compute coefficients all
+    # come from the registry.  fig10-static returns None for the process
+    # and the coefficients, which keeps `schedule_query` on its
+    # historical rng path bit for bit.
+    scenario = canonical_scenario_name(scenario)
+    scn = get_scenario(scenario, seed=0)
+    pool = scn.make_pool()
+    k = pool.num_experts
+    domains = list(range(min(pool.num_domains, len(DOMAINS))))
+    ccfg = channel_lib.ChannelConfig(
+        num_experts=k, num_subcarriers=max(64, k * (k - 1)))
+    proc = scn.channel_process(ccfg, NOMINAL_ROUND_S)
+    comp = scn.comp_coeffs(k)
     points = []
     for policy in available_policies():
         knob, grid = _knob_grid(policy, quick)
         for value, overrides in grid:
             kw = dict(num_layers=LAYERS, n_tokens=N_TOKENS, scheme=policy,
-                      gamma0=0.7)
+                      gamma0=0.7, channel_process=proc, comp_coeff=comp)
             kw.update(overrides)
             t0 = time.perf_counter()
-            r = avg_queries(pool, domains=DOMAINS, n_queries=N_QUERIES, **kw)
+            r = avg_queries(pool, domains=domains, n_queries=N_QUERIES, **kw)
             points.append({
                 "policy": policy,
                 "knob": knob,
@@ -152,15 +170,25 @@ def run_zoo(quick: bool = False, out_path: str | None = None,
                 if p["policy"] == "homogeneous"]
     claims["exact_des_dominates_homogeneous"] = (
         bool(homo_pts) and _dominates(des_pts, homo_pts))
+    # Top-1 gating (topk k=1, the cheapest classical point) must not
+    # escape the exact-DES frontier either — the accuracy model's
+    # coverage-starvation discount is calibrated so a single expert pays
+    # for its savings (repro.data.tasks.COVERAGE_PENALTY).
+    top1_pts = [(p["energy_j"], p["accuracy_pct"]) for p in points
+                if p["policy"] == "topk" and p["value"] == 1]
+    claims["exact_des_dominates_top1"] = (
+        bool(top1_pts) and _dominates(des_pts, top1_pts))
 
     summary = {
         "bench": "policy_zoo",
         "scenario": {
-            "pool": "mixed_cost_pool(k=8)",
+            "name": scenario,
+            "pool": f"ExpertPool(k={pool.num_experts}, "
+                    f"d={pool.num_domains})",
             "num_layers": LAYERS,
             "n_tokens": N_TOKENS,
             "n_queries": N_QUERIES,
-            "domains": DOMAINS,
+            "domains": domains,
         },
         "quick": quick,
         "policies": list(available_policies()),
@@ -194,11 +222,18 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="trim gate-irrelevant grids (CI artifact mode)")
     ap.add_argument("--out", default="BENCH_policy_zoo.json")
+    ap.add_argument("--scenario", default="fig10-static",
+                    help="repro.scenarios regime to sweep under "
+                         "(default: the historical fig10 sweep)")
     args = ap.parse_args()
-    summary = run_zoo(quick=args.quick, out_path=args.out)
+    summary = run_zoo(quick=args.quick, out_path=args.out,
+                      scenario=args.scenario)
     bad = [name for name, ok in summary["claims"].items() if not ok]
-    if bad:
+    if bad and summary["scenario"]["name"] == "fig10-static":
         raise SystemExit(f"policy-zoo dominance gate failed: {bad}")
+    if bad:
+        print(f"note: gate claims not enforced off-default "
+              f"({summary['scenario']['name']}): {bad}")
 
 
 if __name__ == "__main__":

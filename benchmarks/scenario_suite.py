@@ -1,0 +1,150 @@
+"""Scenario-suite benchmark: every registered scenario x every
+registered scheduler policy through the serving front-end.
+
+The paper's central claim — the importance-factor tradeoff adapts across
+channel/task regimes (§VIII, Table I) — is only evidence if the policies
+are exercised beyond the single fig10 regime.  This sweep runs each
+(scenario, policy) pair once on the scenario's own seeded workload:
+correlated Jakes fading, MMPP topic-skewed bursts, heterogeneous
+placements, heavy ad-hoc churn, and the federated private-data skew
+(see docs/scenarios.md for the cards).  Both registries are swept via
+`available_scenarios()` / `available_policies()`, so a new registration
+on either side is covered automatically — and the committed artifact is
+drift-checked against both registries by the `registry-docs` lint rules
+(REG006-REG009) and tests/test_docs_refs.py.
+
+Per point: completion counts, token throughput, QoS-violation rate,
+comm/comp energy (non-finite energies — dead links the policy scheduled
+anyway — are recorded as ``null``, not silently dropped), churn masking
+counters, and mean expert availability.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.scenario_suite [--quick]
+        [--out BENCH_scenarios.json]
+
+writes ``BENCH_scenarios.json`` (a CI artifact next to the policy-zoo
+and serving benchmarks) and exits non-zero if any pair fails to complete
+its workload.  ``--quick`` trims request count and layers; the
+scenario x policy coverage is identical in both modes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+from repro.scenarios import available_scenarios, get_scenario
+from repro.schedulers import available_policies
+
+RATE_HZ = 2.0
+SCENARIO_SEED = 0
+
+
+def _settings(quick: bool) -> dict:
+    return {
+        "num_requests": 6 if quick else 16,
+        "num_layers": 3 if quick else 6,
+        "rate_hz": RATE_HZ,
+        "scenario_seed": SCENARIO_SEED,
+    }
+
+
+def _num(x: float, digits: int = 6):
+    """round() that degrades non-finite values to None (valid JSON)."""
+    return round(x, digits) if math.isfinite(x) else None
+
+
+def _one_point(scenario: str, policy: str, s: dict) -> dict:
+    scn = get_scenario(scenario, seed=s["scenario_seed"])
+    t0 = time.perf_counter()
+    rep = scn.serve(policy, num_requests=s["num_requests"],
+                    rate_hz=s["rate_hz"], num_layers=s["num_layers"])
+    return {
+        "scenario": scenario,
+        "policy": policy,
+        "completed": rep.completed,
+        "num_requests": rep.num_requests,
+        "tokens_out": rep.tokens_out,
+        "rounds": rep.rounds,
+        "makespan_s": _num(rep.makespan_s),
+        "throughput_tok_s": _num(rep.throughput_tok_s, 4),
+        "qos_violation_rate": _num(rep.qos_violation_rate),
+        "comm_energy_j": _num(rep.comm_energy_j),
+        "comp_energy_j": _num(rep.comp_energy_j),
+        "mean_alive": _num(rep.mean_alive, 4),
+        "churn_masked_selections": rep.churn_masked_selections,
+        "churn_qos_misses": rep.churn_qos_misses,
+        "des_nodes": rep.des_nodes,
+        "bench_wall_s": round(time.perf_counter() - t0, 3),
+    }
+
+
+def run_suite(quick: bool = False, out_path: str | None = None,
+              verbose: bool = True) -> dict:
+    s = _settings(quick)
+    points = []
+    for scenario in available_scenarios():
+        for policy in available_policies():
+            p = _one_point(scenario, policy, s)
+            points.append(p)
+            if verbose:
+                comm = p["comm_energy_j"]
+                print(f"{scenario:>15} x {policy:<14} "
+                      f"done={p['completed']}/{p['num_requests']} "
+                      f"viol={p['qos_violation_rate']:.3f} "
+                      f"E_comm={'inf' if comm is None else comm:>10} "
+                      f"({p['bench_wall_s']:.2f}s)")
+
+    claims = {
+        "all_pairs_swept": (
+            {(p["scenario"], p["policy"]) for p in points}
+            == {(s_, p_) for s_ in available_scenarios()
+                for p_ in available_policies()}),
+        "all_requests_completed": all(
+            p["completed"] == p["num_requests"] for p in points),
+    }
+    summary = {
+        "bench": "scenario_suite",
+        "settings": s,
+        "quick": quick,
+        "scenarios": list(available_scenarios()),
+        "policies": list(available_policies()),
+        "points": points,
+        "claims": claims,
+    }
+    if verbose:
+        print("claims:", claims)
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(summary, fh, indent=2)
+        if verbose:
+            print(f"wrote {out_path}")
+    return summary
+
+
+def run(verbose: bool = True):
+    """benchmarks.run harness entry: (csv_rows, data, claims)."""
+    summary = run_suite(quick=True, verbose=verbose)
+    wall_us = sum(p["bench_wall_s"] for p in summary["points"]) * 1e6
+    csv = [("scenario_suite", wall_us / max(len(summary["points"]), 1),
+            ";".join(f"{k}={v}" for k, v in summary["claims"].items()))]
+    return csv, summary, summary["claims"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="trim request count / layers (CI artifact mode)")
+    ap.add_argument("--out", default="BENCH_scenarios.json")
+    args = ap.parse_args()
+    summary = run_suite(quick=args.quick, out_path=args.out)
+    bad = [name for name, ok in summary["claims"].items() if not ok]
+    if bad:
+        raise SystemExit(f"scenario suite claims failed: {bad}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,13 +25,17 @@ counters) when exposed.
 CLI::
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
-        [--out BENCH_serving.json] [--rates 0.5,2,8]
+        [--out BENCH_serving.json] [--rates 0.5,2,8] [--scenario NAME]
 
 writes ``BENCH_serving.json`` (the CI artifact) and exits non-zero if
 any policy fails to complete the workload at any rate.  ``--quick``
 trims layers and request count; the policy × rate coverage is identical
 in both modes (`tests/test_docs_refs.py` fails CI if a registered
-policy is missing from the committed artifact).
+policy is missing from the committed artifact).  ``--scenario`` runs
+the same sweep under any registered `repro.scenarios` regime (its pool,
+channel process, churn, compute coefficients, and traffic shape at the
+swept rates); the default ``fig10-static`` keeps the historical direct
+path bit for bit.
 """
 
 from __future__ import annotations
@@ -41,6 +45,7 @@ import json
 import time
 
 from repro.data.tasks import mixed_cost_pool
+from repro.scenarios import canonical_scenario_name, get_scenario
 from repro.schedulers import available_policies
 from repro.serving.frontend import FrontendConfig, serve_workload
 from repro.serving.workload import WorkloadConfig, generate_workload
@@ -51,8 +56,9 @@ RATES_HZ = (0.5, 2.0, 8.0)
 WORKLOAD_SEED = 0
 
 
-def _scenario(quick: bool) -> dict:
+def _scenario(quick: bool, scenario: str = "fig10-static") -> dict:
     return {
+        "name": scenario,
         "pool": f"mixed_cost_pool(k={K})",
         "num_layers": 4 if quick else 8,
         "num_requests": 16 if quick else 48,
@@ -62,15 +68,27 @@ def _scenario(quick: bool) -> dict:
     }
 
 
-def _one_point(pool, policy: str, rate_hz: float, scn: dict) -> dict:
-    reqs = generate_workload(WorkloadConfig(
-        num_requests=scn["num_requests"], arrival=scn["arrival"],
-        rate_hz=rate_hz, domains=tuple(scn["domains"]),
-        seed=scn["workload_seed"]))
-    cfg = FrontendConfig(num_layers=scn["num_layers"])
-    t0 = time.perf_counter()
-    rep = serve_workload(policy, pool, reqs, cfg=cfg)
-    wall = time.perf_counter() - t0
+def _one_point(pool, policy: str, rate_hz: float, scn: dict,
+               scenario_obj=None) -> dict:
+    if scenario_obj is not None:
+        # registry-routed regime: the scenario owns workload shape,
+        # channel process, churn, and heterogeneity knobs
+        reqs = generate_workload(scenario_obj.workload_config(
+            num_requests=scn["num_requests"], rate_hz=rate_hz))
+        front = scenario_obj.frontend(policy,
+                                      num_layers=scn["num_layers"])
+        t0 = time.perf_counter()
+        rep = front.serve(reqs)
+        wall = time.perf_counter() - t0
+    else:
+        reqs = generate_workload(WorkloadConfig(
+            num_requests=scn["num_requests"], arrival=scn["arrival"],
+            rate_hz=rate_hz, domains=tuple(scn["domains"]),
+            seed=scn["workload_seed"]))
+        cfg = FrontendConfig(num_layers=scn["num_layers"])
+        t0 = time.perf_counter()
+        rep = serve_workload(policy, pool, reqs, cfg=cfg)
+        wall = time.perf_counter() - t0
     j = rep.to_json()
     rounds = max(rep.rounds, 1)
     return {
@@ -99,13 +117,26 @@ def _one_point(pool, policy: str, rate_hz: float, scn: dict) -> dict:
 
 
 def run_bench(quick: bool = False, rates=RATES_HZ,
-              out_path: str | None = None, verbose: bool = True) -> dict:
-    scn = _scenario(quick)
-    pool = mixed_cost_pool(k=K, num_domains=len(DOMAINS))
+              out_path: str | None = None, verbose: bool = True,
+              scenario: str = "fig10-static") -> dict:
+    scenario = canonical_scenario_name(scenario)
+    scn = _scenario(quick, scenario)
+    if scenario == "fig10-static":
+        # keep the committed-artifact path byte-reproducible: the
+        # default regime runs the historical direct construction
+        scenario_obj = None
+        pool = mixed_cost_pool(k=K, num_domains=len(DOMAINS))
+    else:
+        scenario_obj = get_scenario(scenario)
+        pool = scenario_obj.make_pool()
+        scn["pool"] = (f"{scenario}:ExpertPool(k={pool.num_experts}, "
+                       f"d={pool.num_domains})")
+        scn["arrival"] = scenario_obj.workload_config(
+            num_requests=1, rate_hz=1.0).arrival
     points = []
     for policy in available_policies():
         for rate in rates:
-            p = _one_point(pool, policy, rate, scn)
+            p = _one_point(pool, policy, rate, scn, scenario_obj)
             points.append(p)
             if verbose:
                 print(f"{policy:>14} rate={rate:<4} "
@@ -161,10 +192,14 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--rates", default=None,
                     help="comma-separated arrival rates in req/s")
+    ap.add_argument("--scenario", default="fig10-static",
+                    help="repro.scenarios regime to sweep under "
+                         "(default: the historical fig10 serving sweep)")
     args = ap.parse_args()
     rates = (tuple(float(r) for r in args.rates.split(","))
              if args.rates else RATES_HZ)
-    summary = run_bench(quick=args.quick, rates=rates, out_path=args.out)
+    summary = run_bench(quick=args.quick, rates=rates, out_path=args.out,
+                        scenario=args.scenario)
     bad = [name for name, ok in summary["claims"].items() if not ok]
     if bad:
         raise SystemExit(f"serving bench claims failed: {bad}")

@@ -1,10 +1,11 @@
-"""Registry-invariant lint: the policy registry <-> docs <-> benchmark
-artifact contract, as reusable whole-repo checks.
+"""Registry-invariant lint: the policy & scenario registries <-> docs
+<-> benchmark-artifact contract, as reusable whole-repo checks.
 
 `tests/test_docs_refs.py` enforces these at import time (it loads the
-live registry); this checker re-derives the same invariants *statically*
-from `@register_policy("...")` decorator sites, so the lint CLI can run
-without importing (or even having) jax.
+live registries); this checker re-derives the same invariants
+*statically* from `@register_policy("...")` / `@register_scenario("...")`
+decorator sites, so the lint CLI can run without importing (or even
+having) jax.
 
 Rules
 -----
@@ -18,6 +19,18 @@ Rules
 * ``REG004`` (error) — same for ``BENCH_serving.json``.
 * ``REG005`` (error) — two ``@register_policy`` sites claim the same
   name or alias.
+* ``REG006`` (error) — a registered scenario has no ``### `name` ``
+  card in ``docs/scenarios.md``.
+* ``REG007`` (error) — a ``docs/scenarios.md`` card documents a
+  scenario name that is not registered anywhere (stale doc).
+* ``REG008`` (error) — ``BENCH_scenarios.json``'s ``scenarios`` list is
+  missing a registered scenario (regenerate the sweep).
+* ``REG009`` (error) — two ``@register_scenario`` sites claim the same
+  name or alias.
+
+Each registry's rules only fire when that registry has at least one
+decorator site in the analyzed files, so policy-only checkouts (and the
+policy-only test fixture) see no scenario findings.
 """
 
 from __future__ import annotations
@@ -34,19 +47,38 @@ from repro.analysis.findings import Finding, Severity
 
 CARD_RE = re.compile(r"^###\s+`([^`]+)`", re.MULTILINE)
 
-#: Artifacts whose ``policies`` key must cover the registry.
-ARTIFACTS = (("BENCH_policy_zoo.json", "REG003"),
-             ("BENCH_serving.json", "REG004"))
+#: One entry per (registry decorator, docs file, artifacts) contract.
+REGISTRIES = (
+    {
+        "func": "register_policy",
+        "kind": "policy",
+        "doc": "docs/baselines.md",
+        "missing_card": "REG001",
+        "stale_card": "REG002",
+        "dup": "REG005",
+        "artifacts": (("BENCH_policy_zoo.json", "REG003", "policies"),
+                      ("BENCH_serving.json", "REG004", "policies")),
+    },
+    {
+        "func": "register_scenario",
+        "kind": "scenario",
+        "doc": "docs/scenarios.md",
+        "missing_card": "REG006",
+        "stale_card": "REG007",
+        "dup": "REG009",
+        "artifacts": (("BENCH_scenarios.json", "REG008", "scenarios"),),
+    },
+)
 
 
-def _registrations(ctx: RepoContext) -> List[Tuple[str, Tuple[str, ...],
-                                                   str, int]]:
-    """(name, aliases, rel path, line) per @register_policy site."""
+def _registrations(ctx: RepoContext, func: str,
+                   ) -> List[Tuple[str, Tuple[str, ...], str, int]]:
+    """(name, aliases, rel path, line) per ``@<func>`` decorator site."""
     regs = []
     for sf in ctx.files:
         for node in ast.walk(sf.tree):
             if not (isinstance(node, ast.Call) and jaxast.dotted_name(
-                    node.func).rsplit(".", 1)[-1] == "register_policy"):
+                    node.func).rsplit(".", 1)[-1] == func):
                 continue
             if not (node.args and isinstance(node.args[0], ast.Constant)
                     and isinstance(node.args[0].value, str)):
@@ -67,79 +99,88 @@ def _registrations(ctx: RepoContext) -> List[Tuple[str, Tuple[str, ...],
 @register_checker
 class RegistryDocsChecker(Checker):
     name = "registry-docs"
-    description = ("every register_policy name has a baselines.md card "
-                   "and appears in the committed benchmark artifacts")
+    description = ("every register_policy / register_scenario name has "
+                   "a docs card and appears in the committed benchmark "
+                   "artifacts")
 
-    def check_repo(self, ctx: RepoContext) -> Iterable[Finding]:
+    def _check_registry(self, ctx: RepoContext, spec: dict,
+                        ) -> List[Finding]:
         out: List[Finding] = []
-        regs = _registrations(ctx)
+        regs = _registrations(ctx, spec["func"])
         if not regs:
             return out
+        kind = spec["kind"]
         names = {r[0] for r in regs}
 
-        # REG005: duplicate names/aliases across sites
+        # duplicate names/aliases across sites
         claimed: Dict[str, str] = {}
         for name, aliases, rel, line in regs:
             for n in (name,) + aliases:
                 if n in claimed:
                     out.append(self.repo_finding(
-                        ctx, rel, line, "REG005", Severity.ERROR,
-                        f"policy name `{n}` already registered at "
+                        ctx, rel, line, spec["dup"], Severity.ERROR,
+                        f"{kind} name `{n}` already registered at "
                         f"{claimed[n]}",
-                        "pick a unique name/alias per policy"))
+                        f"pick a unique name/alias per {kind}"))
                 else:
                     claimed[n] = f"{rel}:{line}"
 
-        # REG001 / REG002: docs/baselines.md cards
-        doc = ctx.root / "docs" / "baselines.md"
+        # docs cards: one `### `name`` section per registration
+        doc_rel = spec["doc"]
+        doc = ctx.root / doc_rel
         if not doc.exists():
             out.append(self.repo_finding(
-                ctx, "docs/baselines.md", 1, "REG001", Severity.ERROR,
-                "docs/baselines.md not found; every registered policy "
-                "needs a card there",
-                "create the file with one `### `name`` card per policy"))
+                ctx, doc_rel, 1, spec["missing_card"], Severity.ERROR,
+                f"{doc_rel} not found; every registered {kind} needs a "
+                "card there",
+                f"create the file with one `### `name`` card per {kind}"))
         else:
             text = doc.read_text()
             cards = CARD_RE.findall(text)
             for name, aliases, rel, line in regs:
                 if name not in cards:
                     out.append(self.repo_finding(
-                        ctx, rel, line, "REG001", Severity.ERROR,
-                        f"policy `{name}` has no card in "
-                        "docs/baselines.md",
+                        ctx, rel, line, spec["missing_card"],
+                        Severity.ERROR,
+                        f"{kind} `{name}` has no card in {doc_rel}",
                         f"add a `### `{name}`` section describing the "
-                        "policy and when it wins"))
-            for i, card in enumerate(cards):
+                        f"{kind} and when it wins"))
+            for card in cards:
                 if card not in names and all(
                         card not in r[1] for r in regs):
                     card_line = text[:text.index(f"### `{card}`")
                                      ].count("\n") + 1
                     out.append(self.repo_finding(
-                        ctx, "docs/baselines.md", card_line, "REG002",
+                        ctx, doc_rel, card_line, spec["stale_card"],
                         Severity.ERROR,
-                        f"docs/baselines.md documents `{card}` but no "
-                        "register_policy site defines it",
-                        "remove the stale card or register the policy"))
+                        f"{doc_rel} documents `{card}` but no "
+                        f"{spec['func']} site defines it",
+                        f"remove the stale card or register the {kind}"))
 
-        # REG003 / REG004: committed artifact coverage
-        for fname, rule in ARTIFACTS:
+        # committed artifact coverage
+        for fname, rule, key in spec["artifacts"]:
             path = ctx.root / fname
             if not path.exists():
                 continue  # artifact optional in stripped checkouts
             try:
-                listed = set(json.loads(path.read_text()
-                                        ).get("policies", []))
+                listed = set(json.loads(path.read_text()).get(key, []))
             except (json.JSONDecodeError, AttributeError):
                 out.append(self.repo_finding(
                     ctx, fname, 1, rule, Severity.ERROR,
-                    f"{fname} is not valid JSON with a `policies` key",
+                    f"{fname} is not valid JSON with a `{key}` key",
                     "regenerate via the benchmark's --quick mode"))
                 continue
             for name, _aliases, rel, line in regs:
                 if name not in listed:
                     out.append(self.repo_finding(
                         ctx, rel, line, rule, Severity.ERROR,
-                        f"policy `{name}` missing from {fname}",
-                        "regenerate the artifact (benchmarks sweep "
-                        "available_policies() automatically)"))
+                        f"{kind} `{name}` missing from {fname}",
+                        "regenerate the artifact (benchmarks sweep the "
+                        "registry automatically)"))
+        return out
+
+    def check_repo(self, ctx: RepoContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for spec in REGISTRIES:
+            out.extend(self._check_registry(ctx, spec))
         return out

@@ -8,6 +8,21 @@ Implements Eq. (1)-(2):
 Channel gains follow Rayleigh fading with a configurable average path loss
 (paper §VII-A2: path loss 1e-2, SNR P0/N0 = 10 dB, B0 = 1 MHz, P0 = 1e-2 W).
 
+Two temporal regimes are provided for the serving loops:
+
+  * i.i.d. block fading (`sample_channel_gains` / `IIDRayleighProcess`) —
+    every round is an independent Rayleigh draw, the paper's §VII setup;
+  * correlated Jakes fading (`GaussMarkovFading`) — a first-order
+    Gauss-Markov process on the complex amplitudes whose one-round
+    correlation is the Jakes model's rho = J0(2*pi*f_d*dt) for Doppler
+    f_d (node mobility) and round duration dt, so consecutive rounds see
+    correlated CSI instead of independent redraws.  The stationary
+    distribution is exactly the i.i.d. Rayleigh draw, so long-run gain
+    statistics match `sample_channel_gains`.
+
+Both honor an optional per-link mean-gain scale (asymmetric link budgets
+for heterogeneous placements, `repro.scenarios`).
+
 Everything here is plain numpy — the channel model lives on the host side of
 the serving engine (the scheduler runs between jitted model stages).  A jnp
 variant of the rate equation is provided for in-graph cost proxies.
@@ -40,20 +55,142 @@ class ChannelConfig:
 
 
 def sample_channel_gains(
-    cfg: ChannelConfig, rng: np.random.Generator
+    cfg: ChannelConfig, rng: np.random.Generator,
+    link_scale: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Draw H_ij^(m): Rayleigh-fading power gains, shape (K, K, M).
 
     |h|^2 for Rayleigh fading is exponential with mean = avg_path_loss.
+    ``link_scale`` (optional, (K, K)) multiplies the mean gain per
+    directed link — asymmetric link budgets for heterogeneous
+    deployments; ``None`` keeps the homogeneous §VII-A2 channel and the
+    historical draw sequence bit for bit.
     The diagonal (i == j) is in-situ inference: no transmission occurs; we
     fill it with +inf gain so downstream rate math yields zero-cost local
     processing without special-casing.
     """
     k, m = cfg.num_experts, cfg.num_subcarriers
     gains = rng.exponential(scale=cfg.avg_path_loss, size=(k, k, m))
+    if link_scale is not None:
+        gains = gains * np.asarray(link_scale, dtype=np.float64)[:, :, None]
     idx = np.arange(k)
     gains[idx, idx, :] = np.inf
     return gains
+
+
+# ----------------------------------------------------------------------
+# Temporal channel processes (correlated fading for the serving loops)
+# ----------------------------------------------------------------------
+
+def bessel_j0(x: np.ndarray) -> np.ndarray:
+    """Bessel function of the first kind, order 0 (no scipy dependency).
+
+    Abramowitz & Stegun 9.4.1 (|x| <= 3, polynomial) and 9.4.3
+    (|x| > 3, modulus/phase form); absolute error < 2e-8 — far below
+    anything the fading model can resolve.
+    """
+    x = np.abs(np.asarray(x, dtype=np.float64))
+    small = x <= 3.0
+    y = (x / 3.0) ** 2
+    p_small = (1.0 + y * (-2.2499997 + y * (1.2656208 + y * (-0.3163866
+               + y * (0.0444479 + y * (-0.0039444 + y * 0.0002100))))))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        z = np.where(small, 3.0, x)   # dummy 3.0 avoids 0-division
+        y3 = 3.0 / z
+        f0 = (0.79788456 + y3 * (-0.00000077 + y3 * (-0.00552740
+              + y3 * (-0.00009512 + y3 * (0.00137237 + y3 * (-0.00072805
+              + y3 * 0.00014476))))))
+        theta0 = (z - 0.78539816 + y3 * (-0.04166397 + y3 * (-0.00003954
+                  + y3 * (0.00262573 + y3 * (-0.00054125 + y3 *
+                          (-0.00029333 + y3 * 0.00013558))))))
+        p_large = f0 * np.cos(theta0) / np.sqrt(z)
+    return np.where(small, p_small, p_large)
+
+
+def jakes_correlation(doppler_hz: float, round_s: float) -> float:
+    """One-round amplitude correlation of the Jakes mobility model:
+    rho = J0(2 * pi * f_d * dt), clipped to [0, 1) so the Gauss-Markov
+    recursion below stays a valid (stationary) AR(1)."""
+    rho = float(bessel_j0(2.0 * np.pi * doppler_hz * round_s))
+    return float(np.clip(rho, 0.0, 1.0 - 1e-12))
+
+
+class ChannelProcess:
+    """Protocol for per-round gain traces: `reset()` rewinds the process
+    state (a fresh serve must not continue the previous serve's fading
+    trajectory), `step(rng)` yields the next round's (K, K, M) gains.
+    The i.i.d. process is stateless; the Jakes process carries the
+    complex amplitudes between rounds."""
+
+    def reset(self) -> None:   # pragma: no cover
+        pass
+
+    def step(self, rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+
+class IIDRayleighProcess(ChannelProcess):
+    """Independent Rayleigh block fading — one `sample_channel_gains`
+    draw per round (bit-identical to the serving front-end's historical
+    redraw path when ``link_scale`` is None)."""
+
+    def __init__(self, cfg: ChannelConfig,
+                 link_scale: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        self.link_scale = link_scale
+
+    def step(self, rng: np.random.Generator) -> np.ndarray:
+        return sample_channel_gains(self.cfg, rng, self.link_scale)
+
+
+class GaussMarkovFading(ChannelProcess):
+    """Correlated Rayleigh fading via a first-order Gauss-Markov (AR(1))
+    recursion on the complex channel amplitudes:
+
+        h[t] = rho * h[t-1] + sqrt(1 - rho^2) * w[t],   w ~ CN(0, sigma^2)
+
+    with rho = J0(2*pi*doppler_hz*round_s) (Jakes).  Gains are |h|^2, so
+    the stationary gain distribution is exponential with mean
+    avg_path_loss (* link_scale) — identical to `sample_channel_gains` —
+    while the lag-1 gain autocorrelation is rho^2.  Lower Doppler or
+    shorter rounds => longer coherence time => smoother gain traces.
+    """
+
+    def __init__(self, cfg: ChannelConfig, *, doppler_hz: float,
+                 round_s: float,
+                 link_scale: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        self.doppler_hz = float(doppler_hz)
+        self.round_s = float(round_s)
+        self.rho = jakes_correlation(doppler_hz, round_s)
+        k = cfg.num_experts
+        scale = np.ones((k, k)) if link_scale is None \
+            else np.asarray(link_scale, dtype=np.float64)
+        # per-complex-component std so E|h|^2 = avg_path_loss * scale
+        self._sigma = np.sqrt(cfg.avg_path_loss * scale / 2.0)[:, :, None]
+        self._h: Optional[np.ndarray] = None
+
+    def _draw(self, rng: np.random.Generator) -> np.ndarray:
+        k, m = self.cfg.num_experts, self.cfg.num_subcarriers
+        re = rng.standard_normal((k, k, m))
+        im = rng.standard_normal((k, k, m))
+        return self._sigma * (re + 1j * im)
+
+    def reset(self) -> None:
+        self._h = None
+
+    def step(self, rng: np.random.Generator) -> np.ndarray:
+        if self._h is None:
+            self._h = self._draw(rng)      # stationary initial state
+        else:
+            w = self._draw(rng)
+            self._h = self.rho * self._h + np.sqrt(
+                1.0 - self.rho ** 2) * w
+        gains = np.abs(self._h) ** 2
+        k = self.cfg.num_experts
+        idx = np.arange(k)
+        gains[idx, idx, :] = np.inf
+        return gains
 
 
 def subcarrier_rates(cfg: ChannelConfig, gains: np.ndarray) -> np.ndarray:

@@ -1,0 +1,33 @@
+"""Named evaluation scenarios for the DMoE serving stack.
+
+    from repro.scenarios import get_scenario, available_scenarios
+
+    scn = get_scenario("jakes-mobility", seed=0)
+    report = scn.serve("jesa", num_requests=16, rate_hz=2.0)
+
+A scenario bundles expert pool + channel process + traffic profile +
+churn + heterogeneity knobs behind one seed (`repro.scenarios.base`);
+the library of first-class regimes lives in `repro.scenarios.library`
+and is documented card-by-card in docs/scenarios.md.  The registry
+mirrors the scheduler-policy registry, and the same drift gates apply:
+the `registry-docs` lint checker (REG006-REG009) and
+tests/test_docs_refs.py fail when a scenario lacks a card or is missing
+from the committed BENCH_scenarios.json sweep.
+"""
+
+from repro.scenarios.base import (
+    Scenario,
+    available_scenarios,
+    canonical_scenario_name,
+    get_scenario,
+    register_scenario,
+)
+from repro.scenarios import library  # noqa: F401  (registers the library)
+
+__all__ = [
+    "Scenario",
+    "available_scenarios",
+    "canonical_scenario_name",
+    "get_scenario",
+    "register_scenario",
+]

@@ -1,0 +1,185 @@
+"""Scenario protocol + registry (mirror of `repro.schedulers.base`).
+
+A *scenario* bundles everything the serving stack needs to reproduce one
+evaluation regime behind one seed: an expert pool (gates + accuracy
+profiles), a temporal channel process, a traffic profile (arrival
+process, rates, topic mixture), a churn configuration, and the
+heterogeneity knobs (per-node compute coefficients, asymmetric link
+budgets).  Benchmarks and tests construct scenarios by name —
+`get_scenario("jakes-mobility")` — exactly like scheduler policies, so
+every (scenario x policy) pair is one registry lookup away and the
+cross-product stress suite (tests/test_scenarios.py) can never silently
+skip a regime.
+
+The assembly path reuses the production tiers unchanged: `Scenario.serve`
+generates a `repro.serving.workload` trace and pushes it through a
+pool-mode `repro.serving.frontend.ServingFrontend` whose channel process
+/ comp coefficients / churn come from the scenario.  The default
+implementations reproduce the historical fig10 regime bit for bit (i.i.d.
+Rayleigh redraws, Poisson arrivals, uniform topics, no churn, rank-cost
+compute ladder).
+
+Registry drift is linted: the `registry-docs` checker (REG006-REG009)
+statically cross-checks `@register_scenario` sites against the
+docs/scenarios.md cards and the committed BENCH_scenarios.json artifact,
+and tests/test_docs_refs.py enforces the same invariants on the live
+registry.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Optional, Tuple, Type
+
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.data.tasks import ExpertPool
+from repro.schedulers import get_policy
+from repro.serving.churn import ChurnConfig
+from repro.serving.frontend import (
+    FrontendConfig,
+    ServingFrontend,
+    ServingReport,
+)
+from repro.serving.workload import WorkloadConfig, generate_workload
+
+
+class Scenario(abc.ABC):
+    """One named evaluation regime, fully reproducible from one seed.
+
+    Subclasses override the *piece* hooks (`make_pool`,
+    `channel_process`, `comp_coeffs`, `churn_config`, `workload_config`);
+    the *assembly* methods (`frontend`, `serve`) are shared, so every
+    scenario runs through the identical serving front-end and any
+    registered scheduler policy.
+
+    Seeding discipline: the workload trace uses ``seed``, the front-end
+    loop (channel + gates) ``seed + 1``, and churn ``seed + 2`` — three
+    independent streams, all derived from the one scenario seed, so equal
+    scenarios produce bit-equal traces (the reproducibility gate in
+    tests/test_scenarios.py).
+    """
+
+    name: str = "?"
+    #: one-line regime summary (shown by `benchmarks.scenario_suite`)
+    description: str = ""
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+
+    # -- pieces --------------------------------------------------------
+    @abc.abstractmethod
+    def make_pool(self) -> ExpertPool:
+        """The expert pool (profiles + gate model) of this regime."""
+
+    def channel_process(
+        self, cfg: channel_lib.ChannelConfig, round_s: float,
+    ) -> Optional[channel_lib.ChannelProcess]:
+        """Temporal gain process; ``None`` = i.i.d. per-round Rayleigh
+        redraws (the front-end's historical default)."""
+        return None
+
+    def comp_coeffs(self, k: int) -> Optional[np.ndarray]:
+        """(K,) per-node compute coefficients a_j in J/byte; ``None`` =
+        the homogeneous rank-cost ladder (`repro.core.energy`)."""
+        return None
+
+    def churn_config(self) -> Optional[ChurnConfig]:
+        """Expert availability process; ``None`` = no churn."""
+        return None
+
+    def workload_config(self, *, num_requests: int = 16,
+                        rate_hz: float = 2.0) -> WorkloadConfig:
+        """The traffic profile.  Base: Poisson arrivals, uniform topics
+        over the pool's first three domains."""
+        return WorkloadConfig(
+            num_requests=num_requests, rate_hz=rate_hz,
+            domains=self._default_domains(), seed=self.seed)
+
+    def _default_domains(self) -> Tuple[int, ...]:
+        d = self.make_pool().num_domains
+        return tuple(range(min(d, 3)))
+
+    # -- assembly ------------------------------------------------------
+    def frontend_config(self, **overrides: Any) -> FrontendConfig:
+        base: Dict[str, Any] = dict(churn=self.churn_config(),
+                                    seed=self.seed + 1)
+        base.update(overrides)
+        return FrontendConfig(**base)
+
+    def frontend(self, policy: str, *,
+                 policy_kwargs: Optional[Dict[str, Any]] = None,
+                 **cfg_overrides: Any) -> ServingFrontend:
+        """A pool-mode front-end running ``policy`` under this regime."""
+        pool = self.make_pool()
+        cfg = self.frontend_config(**cfg_overrides)
+        k = pool.num_experts
+        ccfg = channel_lib.ChannelConfig(
+            num_experts=k,
+            num_subcarriers=max(cfg.num_subcarriers, k * (k - 1)))
+        return ServingFrontend(
+            policy=get_policy(policy, **(policy_kwargs or {})),
+            pool=pool, cfg=cfg,
+            channel_process=self.channel_process(ccfg,
+                                                 cfg.nominal_round_s),
+            comp_coeff=self.comp_coeffs(k))
+
+    def serve(self, policy: str, *, num_requests: int = 16,
+              rate_hz: float = 2.0,
+              policy_kwargs: Optional[Dict[str, Any]] = None,
+              **cfg_overrides: Any) -> ServingReport:
+        """Generate this scenario's workload and serve it end to end."""
+        reqs = generate_workload(self.workload_config(
+            num_requests=num_requests, rate_hz=rate_hz))
+        front = self.frontend(policy, policy_kwargs=policy_kwargs,
+                              **cfg_overrides)
+        return front.serve(reqs)
+
+
+# ----------------------------------------------------------------------
+# Registry (mirror of the policy registry)
+# ----------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Scenario]] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_scenario(name: str, *, aliases: Tuple[str, ...] = ()):
+    """Class decorator: `@register_scenario("jakes-mobility")`."""
+
+    def deco(cls: Type[Scenario]) -> Type[Scenario]:
+        if name in _REGISTRY or name in _ALIASES:
+            raise ValueError(f"duplicate scenario {name!r}")
+        for a in aliases:
+            if a in _REGISTRY or a in _ALIASES:
+                raise ValueError(
+                    f"alias {a!r} for scenario {name!r} is already taken")
+        cls.name = name
+        _REGISTRY[name] = cls
+        for a in aliases:
+            _ALIASES[a] = name
+        return cls
+
+    return deco
+
+
+def canonical_scenario_name(name: str) -> str:
+    """Resolve an alias to its registered scenario name (KeyError with
+    the available names if unknown)."""
+    key = _ALIASES.get(name, name)
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown scenario {name!r}; "
+            f"available: {sorted(_REGISTRY)} (+aliases {sorted(_ALIASES)})")
+    return key
+
+
+def get_scenario(name: str, **kwargs: Any) -> Scenario:
+    """Construct a registered scenario by name (the single construction
+    path used by the benchmarks and the stress suite)."""
+    return _REGISTRY[canonical_scenario_name(name)](**kwargs)
+
+
+def available_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,239 @@
+"""The first-class scenario library (see docs/scenarios.md for the
+per-scenario cards).  This list is drift-checked against the registry by
+tests/test_docs_refs.py::test_scenario_lists_do_not_drift:
+
+  fig10-static   — the historical default: §VII-B mixed-cost pool,
+                   i.i.d. Rayleigh block fading, Poisson arrivals,
+                   uniform topics, no churn (alias: "default")
+  jakes-mobility — time-varying CSI: correlated Rayleigh/Jakes fading
+                   from node mobility (Gauss-Markov amplitude process,
+                   rho = J0(2*pi*f_d*dt))
+  bursty-skew    — bursty topic-skewed traffic: 2-state MMPP arrivals
+                   with a drifting non-uniform domain mixture
+  hetero-edge    — heterogeneous placement: per-node compute
+                   coefficients spread around the rank ladder +
+                   asymmetric inter-expert link budgets derived from a
+                   co-activation grouping (`repro.distributed.placement`)
+  adhoc-churn    — the §VIII ad-hoc regime: heavy per-round expert
+                   entrance/exit through `repro.serving.churn`
+  federated-skew — federated networked-MoE (arXiv 2511.01743 flavor):
+                   per-node private data skew as a sharp Dirichlet topic
+                   mixture over 5 domains + background client churn
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.core import energy as energy_lib
+from repro.data.tasks import ExpertPool, mixed_cost_pool
+from repro.distributed import placement as placement_lib
+from repro.scenarios.base import Scenario, register_scenario
+from repro.serving.churn import ChurnConfig
+from repro.serving.workload import WorkloadConfig
+
+K = 8          # expert nodes, the fig10 deployment size
+NUM_DOMAINS = 3
+
+
+@register_scenario("fig10-static", aliases=("default",))
+class Fig10StaticScenario(Scenario):
+    """The regime every existing benchmark runs: §VII-B mixed-cost pool,
+    independent Rayleigh redraws, Poisson arrivals, no churn.  All hooks
+    keep their base defaults, so this scenario IS the historical
+    front-end behavior bit for bit."""
+
+    description = ("fig10 default: mixed-cost pool, i.i.d. Rayleigh, "
+                   "Poisson arrivals, no churn")
+
+    def make_pool(self) -> ExpertPool:
+        return mixed_cost_pool(k=K, num_domains=NUM_DOMAINS)
+
+
+@register_scenario("jakes-mobility")
+class JakesMobilityScenario(Scenario):
+    """Mobile nodes => time-varying CSI.  Consecutive rounds see
+    correlated gains from `repro.core.channel.GaussMarkovFading`
+    (rho = J0(2*pi*doppler_hz*round_s)); the stationary distribution
+    matches the static draw, so only the temporal structure changes.
+    The default 1 Hz Doppler (slow pedestrian carrying an edge node)
+    gives rho ~ 0.9 at the 0.1 s nominal round."""
+
+    description = ("correlated Rayleigh/Jakes fading traces from node "
+                   "mobility (Gauss-Markov, rho = J0(2 pi f_d dt))")
+
+    def __init__(self, seed: int = 0, doppler_hz: float = 1.0):
+        super().__init__(seed)
+        self.doppler_hz = float(doppler_hz)
+
+    def make_pool(self) -> ExpertPool:
+        return mixed_cost_pool(k=K, num_domains=NUM_DOMAINS)
+
+    def channel_process(self, cfg: channel_lib.ChannelConfig,
+                        round_s: float,
+                        ) -> channel_lib.ChannelProcess:
+        return channel_lib.GaussMarkovFading(
+            cfg, doppler_hz=self.doppler_hz, round_s=round_s)
+
+
+@register_scenario("bursty-skew")
+class BurstySkewScenario(Scenario):
+    """Bursty topic-skewed traffic: 2-state MMPP arrivals (same long-run
+    rate as Poisson — the load is identical, only the burstiness
+    differs) and a non-uniform domain mixture that drifts through the
+    topics over arrival time (`WorkloadConfig.domain_weights` /
+    ``domain_drift_period_s``)."""
+
+    description = ("MMPP bursts + drifting non-uniform topic mixture at "
+                   "unchanged long-run load")
+
+    def __init__(self, seed: int = 0, burst_factor: float = 8.0,
+                 burst_fraction: float = 0.2,
+                 domain_weights: Tuple[float, ...] = (0.7, 0.2, 0.1),
+                 drift_period_s: float = 30.0):
+        super().__init__(seed)
+        self.burst_factor = float(burst_factor)
+        self.burst_fraction = float(burst_fraction)
+        self.domain_weights = tuple(domain_weights)
+        self.drift_period_s = float(drift_period_s)
+
+    def make_pool(self) -> ExpertPool:
+        return mixed_cost_pool(k=K, num_domains=NUM_DOMAINS)
+
+    def workload_config(self, *, num_requests: int = 16,
+                        rate_hz: float = 2.0) -> WorkloadConfig:
+        return WorkloadConfig(
+            num_requests=num_requests, arrival="mmpp", rate_hz=rate_hz,
+            burst_factor=self.burst_factor,
+            burst_fraction=self.burst_fraction,
+            domains=tuple(range(NUM_DOMAINS)),
+            domain_weights=self.domain_weights,
+            domain_drift_period_s=self.drift_period_s,
+            seed=self.seed)
+
+
+@register_scenario("hetero-edge")
+class HeteroEdgeScenario(Scenario):
+    """Heterogeneous expert placement.  Per-node compute coefficients
+    spread multiplicatively around the §VII-A2 rank ladder (some nodes
+    are phones, some are edge servers), and the inter-expert link
+    budgets are asymmetric: a profiling run's top-2 co-activations are
+    grouped by `repro.distributed.placement.greedy_placement`, links
+    inside a group keep the nominal budget (same rack / same cell),
+    cross-group links are scaled down to a weak backhaul, and every
+    directed link gets an independent asymmetry factor (uplink !=
+    downlink)."""
+
+    description = ("spread per-node compute coefficients + asymmetric "
+                   "co-activation-grouped link budgets")
+
+    def __init__(self, seed: int = 0, comp_spread: float = 4.0,
+                 cross_scale: float = 0.08, num_groups: int = 2):
+        super().__init__(seed)
+        self.comp_spread = float(comp_spread)
+        self.cross_scale = float(cross_scale)
+        self.num_groups = int(num_groups)
+
+    def make_pool(self) -> ExpertPool:
+        return mixed_cost_pool(k=K, num_domains=NUM_DOMAINS)
+
+    def comp_coeffs(self, k: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + 10)
+        base = energy_lib.make_comp_coeffs(k)
+        return base * self.comp_spread ** rng.uniform(-0.5, 0.5, size=k)
+
+    def link_scale(self, k: int) -> np.ndarray:
+        """(K, K) per-link mean-gain scale from the placement grouping."""
+        rng = np.random.default_rng(self.seed + 11)
+        pool = self.make_pool()
+        # profile co-activation: top-2 gate masks over a seeded sample
+        gates = np.concatenate([
+            pool.gate_scores(d, 32, rng) for d in range(NUM_DOMAINS)])
+        order = np.argsort(gates, axis=-1)
+        masks = np.zeros_like(gates)
+        np.put_along_axis(masks, order[:, -2:], 1.0, axis=-1)
+        groups = placement_lib.greedy_placement(
+            placement_lib.coactivation(masks), self.num_groups)
+        shard_of = np.empty(k, dtype=np.int64)
+        for g, members in enumerate(groups):
+            shard_of[members] = g
+        same = shard_of[:, None] == shard_of[None, :]
+        scale = np.where(same, 1.0, self.cross_scale)
+        # directed asymmetry: uplink and downlink budgets differ
+        return scale * rng.uniform(0.6, 1.4, size=(k, k))
+
+    def channel_process(self, cfg: channel_lib.ChannelConfig,
+                        round_s: float,
+                        ) -> channel_lib.ChannelProcess:
+        return channel_lib.IIDRayleighProcess(
+            cfg, link_scale=self.link_scale(cfg.num_experts))
+
+
+@register_scenario("adhoc-churn")
+class AdhocChurnScenario(Scenario):
+    """The §VIII ad-hoc assembling regime: experts enter and exit every
+    round (`repro.serving.churn.ChurnProcess`) at a heavy rate, so the
+    scheduler constantly routes around dead nodes and the front-end's
+    hard post-schedule mask is always active."""
+
+    description = ("heavy per-round expert entrance/exit (p_leave=0.25) "
+                   "through the churn process")
+
+    def __init__(self, seed: int = 0, p_leave: float = 0.25,
+                 min_alive: int = 2):
+        super().__init__(seed)
+        self.p_leave = float(p_leave)
+        self.min_alive = int(min_alive)
+
+    def make_pool(self) -> ExpertPool:
+        return mixed_cost_pool(k=K, num_domains=NUM_DOMAINS)
+
+    def churn_config(self) -> ChurnConfig:
+        return ChurnConfig(p_leave=self.p_leave,
+                           min_alive=self.min_alive,
+                           seed=self.seed + 2)
+
+
+@register_scenario("federated-skew")
+class FederatedSkewScenario(Scenario):
+    """Federated networked-MoE (the arXiv 2511.01743 setting): clients
+    hold private data shards, so the topic mixture is a sharp Dirichlet
+    draw over all five domains (most mass on a couple of topics per
+    deployment) with sharper, more personalized gates, and clients churn
+    in and out at a background rate."""
+
+    description = ("Dirichlet private-data topic skew over 5 domains, "
+                   "sharper gates, background client churn")
+
+    def __init__(self, seed: int = 0, dirichlet_alpha: float = 0.4,
+                 gate_sharpness: float = 9.0, p_leave: float = 0.05):
+        super().__init__(seed)
+        self.dirichlet_alpha = float(dirichlet_alpha)
+        self.gate_sharpness = float(gate_sharpness)
+        self.p_leave = float(p_leave)
+
+    def make_pool(self) -> ExpertPool:
+        pool = mixed_cost_pool(k=K, num_domains=5)
+        return dataclasses.replace(pool,
+                                   gate_sharpness=self.gate_sharpness)
+
+    def private_weights(self) -> np.ndarray:
+        """The deployment's (5,) private-shard topic mixture."""
+        rng = np.random.default_rng(self.seed + 20)
+        return rng.dirichlet(np.full(5, self.dirichlet_alpha))
+
+    def workload_config(self, *, num_requests: int = 16,
+                        rate_hz: float = 2.0) -> WorkloadConfig:
+        return WorkloadConfig(
+            num_requests=num_requests, rate_hz=rate_hz,
+            domains=tuple(range(5)),
+            domain_weights=tuple(self.private_weights()),
+            seed=self.seed)
+
+    def churn_config(self) -> ChurnConfig:
+        return ChurnConfig(p_leave=self.p_leave, min_alive=3,
+                           seed=self.seed + 2)

@@ -72,6 +72,8 @@ class DMoESimulator:
                  policy: Optional[SchedulerPolicy] = None,
                  qos: Optional[QoSSchedule] = None,
                  channel_cfg: Optional[channel_lib.ChannelConfig] = None,
+                 channel_process: Optional[
+                     channel_lib.ChannelProcess] = None,
                  seed: int = 0, top_k: Optional[int] = None,
                  count_backward: bool = True, overlap: bool = True):
         assert cfg.moe.num_experts >= 1 and cfg.arch_type == "moe"
@@ -87,6 +89,10 @@ class DMoESimulator:
         self.channel_cfg = channel_cfg or channel_lib.ChannelConfig(
             num_experts=self.k,
             num_subcarriers=max(64, self.k * (self.k - 1)))
+        # Optional temporal fading process (`repro.scenarios`): gains
+        # evolve across serve() calls instead of being redrawn i.i.d.;
+        # None keeps the historical draw (and rng stream) bit for bit.
+        self.channel_process = channel_process
         self.rng = np.random.default_rng(seed)
         self.params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
         self.comp_coeff = energy_lib.make_comp_coeffs(self.k)
@@ -138,7 +144,10 @@ class DMoESimulator:
         k, n = tokens.shape
         assert k == self.k, "one query per expert node (§III-C step 1)"
 
-        gains = channel_lib.sample_channel_gains(self.channel_cfg, self.rng)
+        gains = (self.channel_process.step(self.rng)
+                 if self.channel_process is not None else
+                 channel_lib.sample_channel_gains(self.channel_cfg,
+                                                  self.rng))
         rates = channel_lib.subcarrier_rates(self.channel_cfg, gains)
 
         x = jnp.take(self.params["embed"], jnp.asarray(tokens), axis=0)

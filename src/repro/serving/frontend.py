@@ -249,7 +249,10 @@ class ServingFrontend:
     def __init__(self, *, policy: Optional[Any] = None,
                  pool: Optional[ExpertPool] = None,
                  sim: Optional[Any] = None,
-                 cfg: FrontendConfig = FrontendConfig()):
+                 cfg: FrontendConfig = FrontendConfig(),
+                 channel_process: Optional[
+                     channel_lib.ChannelProcess] = None,
+                 comp_coeff: Optional[np.ndarray] = None):
         if (pool is None) == (sim is None):
             raise ValueError("pass exactly one of pool= or sim=")
         self.cfg = cfg
@@ -276,7 +279,19 @@ class ServingFrontend:
             num_experts=self.k,
             num_subcarriers=max(cfg.num_subcarriers,
                                 self.k * (self.k - 1)))
-        self.comp_coeff = energy_lib.make_comp_coeffs(self.k)
+        #: Optional scenario hooks (`repro.scenarios`): a temporal
+        #: channel process replacing the i.i.d. per-round redraws, and
+        #: heterogeneous per-node compute coefficients replacing the
+        #: default rank-cost ladder.  ``None`` keeps the historical
+        #: behavior (and rng stream) bit for bit.
+        self.channel_process = channel_process
+        self.comp_coeff = (np.asarray(comp_coeff, dtype=np.float64)
+                           if comp_coeff is not None
+                           else energy_lib.make_comp_coeffs(self.k))
+        if self.comp_coeff.shape != (self.k,):
+            raise ValueError(
+                f"comp_coeff must have shape ({self.k},), "
+                f"got {self.comp_coeff.shape}")
         self.s0 = 8192.0
         #: sim mode: the exact (K, N) token batches fed to the simulator,
         #: in order — an offline DMoESimulator replay of these batches
@@ -355,7 +370,12 @@ class ServingFrontend:
         rng = np.random.default_rng(cfg.seed)
         churn = (ChurnProcess(self.k, cfg.churn)
                  if cfg.churn is not None else None)
-        gains = channel_lib.sample_channel_gains(self.channel_cfg, rng)
+        proc = self.channel_process
+        if proc is not None:
+            proc.reset()                   # new serve, fresh trajectory
+            gains = proc.step(rng)
+        else:
+            gains = channel_lib.sample_channel_gains(self.channel_cfg, rng)
         rates0 = channel_lib.subcarrier_rates(self.channel_cfg, gains)
 
         queue = list(reqs)                 # not yet arrived (sorted)
@@ -400,8 +420,9 @@ class ServingFrontend:
             for layer in range(1, cfg.num_layers + 1):
                 rates = rates0
                 if cfg.redraw_channel:
-                    gains = channel_lib.sample_channel_gains(
-                        self.channel_cfg, rng)
+                    gains = (proc.step(rng) if proc is not None else
+                             channel_lib.sample_channel_gains(
+                                 self.channel_cfg, rng))
                     rates = channel_lib.subcarrier_rates(
                         self.channel_cfg, gains)
                 alive = churn.step() if churn is not None \
@@ -611,10 +632,14 @@ def serve_workload(policy: str, pool: ExpertPool,
                    requests: List[ServeRequest], *,
                    cfg: FrontendConfig = FrontendConfig(),
                    policy_kwargs: Optional[Dict[str, Any]] = None,
+                   channel_process: Optional[
+                       channel_lib.ChannelProcess] = None,
+                   comp_coeff: Optional[np.ndarray] = None,
                    ) -> ServingReport:
     """One-call convenience: construct the policy by registry name and
     serve `requests` through a pool-mode `ServingFrontend`."""
     front = ServingFrontend(
         policy=get_policy(policy, **(policy_kwargs or {})),
-        pool=pool, cfg=cfg)
+        pool=pool, cfg=cfg, channel_process=channel_process,
+        comp_coeff=comp_coeff)
     return front.serve(requests)

@@ -181,9 +181,45 @@ class WorkloadConfig:
     mean_dwell_s: float = 4.0           # mmpp: calm-state mean dwell
     prompt_tokens: Tuple[int, int] = (4, 10)   # inclusive range
     domains: Tuple[int, ...] = (0, 1, 2)
+    #: Optional non-uniform topic mixture over ``domains``.  ``None``
+    #: keeps the historical uniform draw (and its exact rng sequence).
+    domain_weights: Optional[Tuple[float, ...]] = None
+    #: With ``domain_weights`` set, a period > 0 rotates the mixture
+    #: through the domains over arrival time (one full rotation per
+    #: period): the drifting-topic regime of `repro.scenarios`.
+    domain_drift_period_s: float = 0.0
     classes: Tuple[QoSClass, ...] = DEFAULT_CLASSES
     vocab_size: int = 256
     seed: int = 0
+
+
+def _draw_domains(cfg: WorkloadConfig, arrive: np.ndarray,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Per-request topic draws.  Uniform (the historical path, rng
+    sequence preserved bit for bit) unless ``domain_weights`` is set;
+    with a drift period the weight vector rotates through the domains
+    over arrival time, linearly interpolating between adjacent
+    rotations so the mixture drifts smoothly instead of jumping."""
+    doms = np.asarray(cfg.domains)
+    if cfg.domain_weights is None:
+        return rng.choice(doms, size=len(arrive))
+    w = np.asarray(cfg.domain_weights, dtype=np.float64)
+    if w.shape != doms.shape or (w < 0).any() or w.sum() <= 0:
+        raise ValueError(
+            f"domain_weights must be {len(doms)} nonnegative weights "
+            f"with positive sum, got {cfg.domain_weights!r}")
+    w = w / w.sum()
+    out = np.empty(len(arrive), dtype=doms.dtype)
+    for i, t in enumerate(arrive):
+        wi = w
+        if cfg.domain_drift_period_s > 0:
+            phase = (t / cfg.domain_drift_period_s) * len(doms)
+            k0 = int(np.floor(phase))
+            frac = phase - np.floor(phase)
+            wi = ((1.0 - frac) * np.roll(w, k0 % len(doms))
+                  + frac * np.roll(w, (k0 + 1) % len(doms)))
+        out[i] = rng.choice(doms, p=wi)
+    return out
 
 
 def generate_workload(cfg: WorkloadConfig) -> List[ServeRequest]:
@@ -216,7 +252,7 @@ def generate_workload(cfg: WorkloadConfig) -> List[ServeRequest]:
     class_idx = rng.choice(len(cfg.classes), size=n, p=weights)
     lo_p, hi_p = cfg.prompt_tokens
     plens = rng.integers(lo_p, hi_p + 1, size=n)
-    domains = rng.choice(np.asarray(cfg.domains), size=n)
+    domains = _draw_domains(cfg, arrive, rng)
 
     requests: List[ServeRequest] = []
     for i in range(n):

@@ -115,6 +115,30 @@ def test_registry_docs_checker_exact(tmp_path):
     assert all(f.severity is Severity.ERROR for f in rep.findings)
 
 
+def test_registry_docs_scenarios_exact(tmp_path):
+    (tmp_path / "scen.py").write_text(
+        'from repro.scenarios import register_scenario\n'
+        'register_scenario("alpha", aliases=("a",))(object)\n'  # line 2
+        'register_scenario("beta")(object)\n'                   # line 3
+        'register_scenario("alpha")(object)\n')                 # line 4
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "scenarios.md").write_text(
+        "# Scenarios\n\n### `alpha`\n\nok\n\n### `ghost`\n\nstale\n")
+    (tmp_path / "BENCH_scenarios.json").write_text(
+        json.dumps({"scenarios": ["alpha"]}))
+
+    rep = run_analysis(tmp_path, ["scen.py"],
+                       checkers=["registry-docs"])
+    got = [(f.rule, f.path, f.line) for f in rep.findings]
+    assert ("REG009", "scen.py", 4) in got        # duplicate `alpha`
+    assert ("REG006", "scen.py", 3) in got        # `beta` has no card
+    assert ("REG007", "docs/scenarios.md", 7) in got  # `ghost` is stale
+    assert ("REG008", "scen.py", 3) in got        # `beta` not in artifact
+    # no register_policy sites in this fixture -> no policy findings
+    assert len(got) == 4
+    assert all(f.severity is Severity.ERROR for f in rep.findings)
+
+
 def test_good_fixtures_are_fully_clean():
     rep = run_analysis(REPO_ROOT, [FIXTURES])
     assert not [f for f in rep.findings if "good_" in f.path]

@@ -21,7 +21,10 @@ ported baseline policies (`repro.schedulers.channel_aware`,
 `repro.schedulers.siftmoe`) must appear in docs/paper_map.md — and the
 policy-list drift contract: every registered policy name must be
 mentioned in the `repro.schedulers` package docstring, listed in
-docs/policies.md, and carded in docs/baselines.md.
+docs/policies.md, and carded in docs/baselines.md.  The scenario
+registry (`repro.scenarios`) gets the same treatment: a card per
+scenario in docs/scenarios.md, a docstring list entry, and full
+(scenario x policy) coverage in the committed BENCH_scenarios.json.
 """
 
 from __future__ import annotations
@@ -114,7 +117,9 @@ def test_path_refs_resolve(doc, ref):
                                     "repro.schedulers.siftmoe",
                                     "repro.distributed.multihost",
                                     "repro.serving.workload",
-                                    "repro.serving.frontend"])
+                                    "repro.serving.frontend",
+                                    "repro.scenarios.base",
+                                    "repro.scenarios.library"])
 def test_paper_map_covers_public_functions(module):
     """Acceptance contract: docs/paper_map.md names every public function
     (and public class) of the core solver modules and the sharded /
@@ -157,6 +162,51 @@ def test_policy_lists_do_not_drift():
         if f"### `{name}`" not in baselines_md:
             missing.append(f"docs/baselines.md section: {name}")
     assert not missing, f"undocumented policies: {missing}"
+
+
+def test_scenario_lists_do_not_drift():
+    """Registering a scenario without documenting it is a test failure:
+    every `repro.scenarios.available_scenarios()` name must have a
+    `name — description` entry line in the `repro.scenarios.library`
+    docstring and a `### \\`name\\`` card section in docs/scenarios.md
+    (the live-registry twin of the static REG006/REG007 lint rules)."""
+    import repro.scenarios as scenarios
+    from repro.scenarios import library
+
+    scenarios_md = (REPO / "docs" / "scenarios.md").read_text()
+    missing = []
+    for name in scenarios.available_scenarios():
+        entry = re.compile(rf"^\s+{re.escape(name)}\s+—", re.M)
+        if not entry.search(library.__doc__):
+            missing.append(f"repro.scenarios.library docstring: {name}")
+        if f"### `{name}`" not in scenarios_md:
+            missing.append(f"docs/scenarios.md section: {name}")
+    assert not missing, f"undocumented scenarios: {missing}"
+
+
+def test_scenario_suite_covers_every_scenario_and_policy():
+    """The committed scenario-suite artifact cannot silently skip a
+    regime or a policy: every (scenario, policy) pair of the two live
+    registries must appear as a swept point in BENCH_scenarios.json
+    (the live-registry twin of the static REG008 lint rule)."""
+    import json
+
+    import repro.scenarios as scenarios
+    import repro.schedulers as schedulers
+
+    bench_path = REPO / "BENCH_scenarios.json"
+    assert bench_path.is_file(), (
+        "BENCH_scenarios.json missing — run "
+        "`PYTHONPATH=src python -m benchmarks.scenario_suite --quick`")
+    bench = json.loads(bench_path.read_text())
+    swept = {(p["scenario"], p["policy"]) for p in bench["points"]}
+    want = {(s, p) for s in scenarios.available_scenarios()
+            for p in schedulers.available_policies()}
+    missing = sorted(want - swept)
+    assert not missing, (
+        f"BENCH_scenarios.json stale — unswept pairs: {missing}; re-run "
+        "benchmarks/scenario_suite.py --quick")
+    assert set(bench["scenarios"]) >= set(scenarios.available_scenarios())
 
 
 def test_serving_bench_covers_every_policy():

@@ -1,0 +1,405 @@
+"""Scenario registry + cross-policy stress suite.
+
+Four layers of guarantees over `repro.scenarios`:
+
+* registry surface — names/aliases resolve, duplicates are rejected,
+  and `fig10-static` reproduces the historical direct serving path bit
+  for bit;
+* statistical properties of the new regime pieces — Jakes fading lag-1
+  autocorrelation rises with coherence time while the long-run gain
+  distribution matches the static draw; MMPP holds the Poisson long-run
+  rate; the drifting topic mixture tracks its weights;
+* metamorphic/monotonicity properties — same seed => bit-equal full
+  traces; energy non-increasing as the QoS schedule relaxes; QoS misses
+  non-decreasing under heavier churn;
+* the cross-product stress gate — EVERY scenario x EVERY registered
+  policy serves without raising, dead experts are never scheduled, and
+  the hostile corners (all-dead channel rounds, zero-alive churn,
+  C3-starved tiny-M contexts) degrade (energy=inf / masked selections /
+  QoS misses) instead of crashing.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import channel as channel_lib
+from repro.core import energy as energy_lib
+from repro.core import protocol as proto
+from repro.core.gating import QoSSchedule
+from repro.data.tasks import mixed_cost_pool
+from repro.scenarios import (
+    Scenario,
+    available_scenarios,
+    canonical_scenario_name,
+    get_scenario,
+    register_scenario,
+)
+from repro.schedulers import ScheduleContext, available_policies, get_policy
+from repro.serving.churn import ChurnConfig
+from repro.serving.frontend import (FrontendConfig, ServingFrontend,
+                                    serve_workload)
+from repro.serving.workload import (WorkloadConfig, generate_workload,
+                                    mmpp_arrivals, poisson_arrivals)
+
+EXPECTED_SCENARIOS = ("adhoc-churn", "bursty-skew", "federated-skew",
+                      "fig10-static", "hetero-edge", "jakes-mobility")
+
+# small-but-real serving settings shared by the trace-level tests
+N_REQ, N_LAYERS, RATE = 3, 2, 2.0
+
+
+def _serve(scenario, policy="jesa", seed=0, **kw):
+    kw.setdefault("num_requests", N_REQ)
+    kw.setdefault("rate_hz", RATE)
+    kw.setdefault("num_layers", N_LAYERS)
+    return get_scenario(scenario, seed=seed).serve(policy, **kw)
+
+
+# ----------------------------------------------------------------------
+# registry surface
+# ----------------------------------------------------------------------
+
+def test_registry_names():
+    assert available_scenarios() == EXPECTED_SCENARIOS
+    assert len(available_scenarios()) >= 6
+
+
+def test_alias_and_unknown():
+    assert canonical_scenario_name("default") == "fig10-static"
+    assert type(get_scenario("default")) is type(get_scenario("fig10-static"))
+    with pytest.raises(KeyError, match="unknown scenario"):
+        canonical_scenario_name("no-such-regime")
+    with pytest.raises(KeyError, match="available"):
+        get_scenario("no-such-regime")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        register_scenario("fig10-static")(object)
+    with pytest.raises(ValueError, match="already taken"):
+        register_scenario("something-new", aliases=("default",))(object)
+    assert "something-new" not in available_scenarios()
+
+
+@pytest.mark.parametrize("name", EXPECTED_SCENARIOS)
+def test_scenario_surface(name):
+    scn = get_scenario(name, seed=3)
+    assert isinstance(scn, Scenario)
+    assert scn.name == name
+    assert scn.description
+    assert scn.seed == 3
+    pool = scn.make_pool()
+    assert pool.num_experts == 8
+    wcfg = scn.workload_config(num_requests=5, rate_hz=1.0)
+    assert wcfg.num_requests == 5
+    assert max(wcfg.domains) < pool.num_domains
+
+
+def test_fig10_static_is_the_historical_path():
+    """The default scenario IS serve_workload on the fig10 pool —
+    identical energies and per-round selections, not just close."""
+    reqs = generate_workload(WorkloadConfig(
+        num_requests=N_REQ, rate_hz=RATE, domains=(0, 1, 2), seed=0))
+    rep_hist = serve_workload(
+        "jesa", mixed_cost_pool(k=8, num_domains=3), reqs,
+        cfg=FrontendConfig(num_layers=N_LAYERS, seed=1, record_trace=True))
+    rep_scn = _serve("default", record_trace=True)
+    assert rep_scn.comm_energy_j == rep_hist.comm_energy_j
+    assert rep_scn.comp_energy_j == rep_hist.comp_energy_j
+    assert rep_scn.makespan_s == rep_hist.makespan_s
+    assert len(rep_scn.trace) == len(rep_hist.trace)
+    for a, b in zip(rep_scn.trace, rep_hist.trace):
+        assert np.array_equal(a.alpha, b.alpha)
+
+
+# ----------------------------------------------------------------------
+# same-seed bit-reproducibility of full traces
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", EXPECTED_SCENARIOS)
+def test_same_seed_bit_reproducible(name):
+    a = _serve(name, seed=0, record_trace=True)
+    b = _serve(name, seed=0, record_trace=True)
+    assert a.comm_energy_j == b.comm_energy_j
+    assert a.comp_energy_j == b.comp_energy_j
+    assert a.makespan_s == b.makespan_s
+    assert a.churn_qos_misses == b.churn_qos_misses
+    assert len(a.trace) == len(b.trace) > 0
+    for ra, rb in zip(a.trace, b.trace):
+        assert np.array_equal(ra.alive, rb.alive)
+        assert np.array_equal(ra.alpha, rb.alpha)
+        assert ra.energy_j == rb.energy_j
+        assert ra.round_s == rb.round_s
+
+
+def test_seed_actually_matters():
+    a = _serve("jakes-mobility", seed=0, record_trace=True)
+    b = _serve("jakes-mobility", seed=7, record_trace=True)
+    assert any(not np.array_equal(ra.alpha, rb.alpha)
+               for ra, rb in zip(a.trace, b.trace)) \
+        or a.comm_energy_j != b.comm_energy_j
+
+
+# ----------------------------------------------------------------------
+# fading process properties
+# ----------------------------------------------------------------------
+
+def test_bessel_j0_reference_values():
+    assert channel_lib.bessel_j0(0.0) == pytest.approx(1.0, abs=1e-9)
+    # first zero of J0
+    assert channel_lib.bessel_j0(2.404825557695773) == pytest.approx(
+        0.0, abs=1e-6)
+    assert channel_lib.bessel_j0(1.0) == pytest.approx(0.7651976866,
+                                                       abs=1e-7)
+
+
+def test_jakes_correlation_monotone_in_doppler():
+    rhos = [channel_lib.jakes_correlation(f, 0.1)
+            for f in (0.0, 0.5, 1.0, 2.0)]
+    assert rhos[0] == pytest.approx(1.0, abs=1e-9)
+    assert all(a > b for a, b in zip(rhos, rhos[1:]))
+
+
+def _gain_trace(doppler_hz, steps=3000, seed=0):
+    cfg = channel_lib.ChannelConfig(num_experts=4, num_subcarriers=16)
+    proc = channel_lib.GaussMarkovFading(cfg, doppler_hz=doppler_hz,
+                                         round_s=0.1)
+    proc.reset()
+    rng = np.random.default_rng(seed)
+    return np.array([proc.step(rng)[0, 1, 0] for _ in range(steps)])
+
+
+def test_fading_autocorrelation_rises_with_coherence_time():
+    """Lower Doppler = longer coherence time = higher lag-1 gain
+    autocorrelation (the defining property of the Jakes trace)."""
+    def lag1(g):
+        return float(np.corrcoef(g[:-1], g[1:])[0, 1])
+    slow, fast = _gain_trace(0.5), _gain_trace(4.0)
+    assert lag1(slow) > 0.9
+    assert lag1(slow) > lag1(fast) + 0.5
+
+
+def test_fading_long_run_mean_matches_static_draw():
+    """The Gauss-Markov process is stationary: its long-run gain mean
+    matches the i.i.d. Rayleigh draw (only temporal structure differs)."""
+    cfg = channel_lib.ChannelConfig(num_experts=4, num_subcarriers=16)
+    rng = np.random.default_rng(1)
+    iid = np.array([channel_lib.sample_channel_gains(cfg, rng)[0, 1, 0]
+                    for _ in range(2000)])
+    fast = _gain_trace(4.0)   # near-uncorrelated => tight effective n
+    assert fast.mean() == pytest.approx(iid.mean(), rel=0.15)
+
+
+def test_iid_process_matches_sample_channel_gains():
+    cfg = channel_lib.ChannelConfig(num_experts=4, num_subcarriers=8)
+    proc = channel_lib.IIDRayleighProcess(cfg)
+    proc.reset()
+    a = proc.step(np.random.default_rng(5))
+    b = channel_lib.sample_channel_gains(cfg, np.random.default_rng(5))
+    assert np.array_equal(a, b)
+
+
+def test_link_scale_scales_mean_gains():
+    cfg = channel_lib.ChannelConfig(num_experts=3, num_subcarriers=8)
+    scale = np.array([[1.0, 0.1, 1.0],
+                      [1.0, 1.0, 0.1],
+                      [0.1, 1.0, 1.0]])
+    base = channel_lib.sample_channel_gains(cfg, np.random.default_rng(2))
+    scaled = channel_lib.sample_channel_gains(
+        cfg, np.random.default_rng(2), link_scale=scale)
+    off = ~np.eye(3, dtype=bool)
+    assert np.allclose(scaled[off], (base * scale[:, :, None])[off])
+
+
+# ----------------------------------------------------------------------
+# traffic properties
+# ----------------------------------------------------------------------
+
+def test_mmpp_long_run_rate_matches_poisson():
+    n, rate = 4000, 2.0
+    t_poisson = poisson_arrivals(rate, n, np.random.default_rng(0))[-1]
+    t_mmpp = mmpp_arrivals(rate, n, np.random.default_rng(1),
+                           burst_factor=8.0, burst_fraction=0.2)[-1]
+    assert n / t_poisson == pytest.approx(rate, rel=0.1)
+    assert n / t_mmpp == pytest.approx(rate, rel=0.15)
+
+
+def test_mmpp_is_burstier_than_poisson():
+    n, rate = 4000, 2.0
+    gp = np.diff(poisson_arrivals(rate, n, np.random.default_rng(0)))
+    gm = np.diff(mmpp_arrivals(rate, n, np.random.default_rng(1),
+                               burst_factor=8.0, burst_fraction=0.2))
+    # coefficient of variation of interarrivals: 1 for Poisson, > 1 MMPP
+    assert gm.std() / gm.mean() > gp.std() / gp.mean() + 0.2
+
+
+def test_domain_weights_skew_the_mixture():
+    scn = get_scenario("federated-skew", seed=0)
+    w = scn.private_weights()
+    assert w.shape == (5,) and w.sum() == pytest.approx(1.0)
+    reqs = generate_workload(scn.workload_config(num_requests=400,
+                                                 rate_hz=2.0))
+    hist = np.bincount([r.domain for r in reqs], minlength=5) / len(reqs)
+    assert int(np.argmax(hist)) == int(np.argmax(w))
+    assert np.abs(hist - w).max() < 0.1
+
+
+def test_bad_domain_weights_rejected():
+    cfg = WorkloadConfig(num_requests=4, domains=(0, 1, 2),
+                         domain_weights=(0.5, 0.5))  # wrong arity
+    with pytest.raises(ValueError, match="domain_weights"):
+        generate_workload(cfg)
+
+
+def test_uniform_draw_unchanged_without_weights():
+    """domain_weights=None keeps the historical rng path bit for bit."""
+    base = generate_workload(WorkloadConfig(num_requests=6, seed=0))
+    again = generate_workload(WorkloadConfig(num_requests=6, seed=0,
+                                             domain_weights=None))
+    assert [r.domain for r in base] == [r.domain for r in again]
+    assert [r.arrive_s for r in base] == [r.arrive_s for r in again]
+
+
+# ----------------------------------------------------------------------
+# monotonicity / metamorphic properties
+# ----------------------------------------------------------------------
+
+def test_energy_non_increasing_as_qos_relaxes():
+    """Shifting importance from accuracy to channel thrift (smaller
+    gamma0 => faster-decaying QoS schedule) never costs more energy."""
+    energies = [
+        _serve("fig10-static", gamma0=g).total_energy_j
+        for g in (0.9, 0.7, 0.5)]
+    assert energies[0] >= energies[1] >= energies[2]
+
+
+def test_churn_misses_non_decreasing_in_churn_rate():
+    misses = []
+    for p_leave in (0.0, 0.35):
+        rep = get_scenario("adhoc-churn", seed=0, p_leave=p_leave).serve(
+            "jesa", num_requests=4, rate_hz=RATE, num_layers=3)
+        misses.append(rep.churn_qos_misses)
+    assert misses[0] == 0
+    assert misses[1] >= misses[0]
+
+
+# ----------------------------------------------------------------------
+# cross-product stress gate
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", EXPECTED_SCENARIOS)
+def test_every_policy_serves_every_scenario(scenario):
+    """The gate: one serving round of every registered policy under
+    every scenario completes without raising, and experts that churn
+    declared dead are never present in the executed selection."""
+    for policy in available_policies():
+        rep = _serve(scenario, policy=policy, num_requests=2,
+                     num_layers=1, record_trace=True)
+        assert rep.completed == rep.num_requests, (scenario, policy)
+        assert rep.tokens_out > 0
+        for rec in rep.trace:
+            dead = ~rec.alive
+            if dead.any():
+                assert rec.alpha[:, :, dead].sum() == 0, (scenario, policy)
+
+
+class _DeadChannel(channel_lib.ChannelProcess):
+    """Every cross link is (numerically) dead; self-links stay free."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def reset(self):
+        pass
+
+    def step(self, rng):
+        k, m = self.cfg.num_experts, self.cfg.num_subcarriers
+        g = np.full((k, k, m), 1e-30)
+        g[np.arange(k), np.arange(k), :] = np.inf
+        return g
+
+
+def test_all_dead_channel_rounds_degrade_not_crash():
+    pool = mixed_cost_pool(k=8, num_domains=3)
+    reqs = generate_workload(WorkloadConfig(num_requests=2, rate_hz=4.0,
+                                            seed=0))
+    ccfg = channel_lib.ChannelConfig(num_experts=8, num_subcarriers=64)
+    for policy in available_policies():
+        front = ServingFrontend(
+            policy=get_policy(policy), pool=pool,
+            cfg=FrontendConfig(num_layers=1, seed=1),
+            channel_process=_DeadChannel(ccfg))
+        rep = front.serve(reqs)   # must not raise
+        assert rep.completed == rep.num_requests, policy
+        # dead links => unbounded comm energy, reported as inf (the
+        # round-time clamp keeps the simulated clock finite)
+        assert np.isinf(rep.comm_energy_j) or rep.comm_energy_j > 1e3
+        assert np.isfinite(rep.makespan_s)
+
+
+def test_zero_alive_churn_degrades_not_crashes():
+    pool = mixed_cost_pool(k=8, num_domains=3)
+    reqs = generate_workload(WorkloadConfig(num_requests=2, rate_hz=4.0,
+                                            seed=0))
+    for policy in ("jesa", "topk", "dense"):
+        front = ServingFrontend(
+            policy=get_policy(policy), pool=pool,
+            cfg=FrontendConfig(
+                num_layers=1, seed=1,
+                churn=ChurnConfig(p_leave=1.0, min_alive=0, seed=2)))
+        rep = front.serve(reqs)   # must not raise
+        assert rep.completed == rep.num_requests, policy
+        assert rep.mean_alive == 0.0
+        assert rep.churn_qos_misses > 0   # nothing alive => misses
+
+
+def test_c3_starved_context_schedules_without_raising():
+    """Too much traffic for the round (tiny M, microscopic rates): every
+    policy must still return a schedule — energy blows up instead."""
+    k, n, m = 4, 6, 4          # m << k*(k-1)
+    pool = mixed_cost_pool(k=k, num_domains=3)
+    rng = np.random.default_rng(0)
+    g_src = pool.gate_scores(0, n, rng)
+    gates = np.zeros((k, n, k))
+    gates[0] = g_src
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=m)
+    rates = channel_lib.subcarrier_rates(
+        ccfg, channel_lib.sample_channel_gains(ccfg, rng)) * 1e-6
+    for policy in available_policies():
+        ctx = ScheduleContext(
+            gate_scores=gates, rates=rates, layer=1, qos=0.9,
+            qos_schedule=QoSSchedule(z=1.0, gamma0=0.9),
+            max_experts=2, top_k=2,
+            comp_coeff=energy_lib.make_comp_coeffs(k),
+            s0=8192.0, p0=ccfg.tx_power_w, rng=rng)
+        res = get_policy(policy).schedule(ctx)   # must not raise
+        acct = proto.account_schedule(res, ctx)
+        assert res.alpha.shape == (k, n, k)
+        assert acct.comm_energy_j > 1e2 or np.isinf(acct.comm_energy_j)
+
+
+def test_dmoe_simulator_accepts_channel_process():
+    """The protocol simulator takes the same temporal-fading hook as the
+    serving frontend: same seed + same process config => bit-equal
+    energies, and the evolving gains actually change the accounting
+    relative to the historical i.i.d. draw."""
+    from repro.configs.base import get_smoke_config
+    from repro.serving import DMoESimulator
+
+    cfg = get_smoke_config("mixtral-8x7b").with_overrides(
+        num_layers=2, moe_num_experts=4)
+    ccfg = channel_lib.ChannelConfig(num_experts=4, num_subcarriers=64)
+    tokens = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, size=(4, 5))
+
+    def run(process):
+        sim = DMoESimulator(cfg, scheme="jesa", seed=11,
+                            channel_cfg=ccfg, channel_process=process)
+        return sim.serve(tokens).summary["total_energy_j"]
+
+    fading = lambda: channel_lib.GaussMarkovFading(
+        ccfg, doppler_hz=2.0, round_s=0.05)
+    a, b = run(fading()), run(fading())
+    assert a == b                          # same seed => bit-equal
+    assert np.isfinite(a) and a > 0
+    assert a != run(None)                  # hook actually changes gains
