@@ -349,6 +349,116 @@ def run_async_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
     return summary
 
 
+def run_warm_start_sweep(k: int = 8, n_tokens: int = 256, d: int = 2,
+                         qos_z: float = 1.0, gamma0: float = 0.7,
+                         num_layers: int = 3, rounds: int = 3, seed: int = 7,
+                         verbose: bool = True) -> dict:
+    """Cross-round warm starts on the gamma-annealed alpha-step sweep.
+
+    Serves `rounds` consecutive protocol rounds of the full 3-layer
+    z * gamma0^l schedule on a COHERENT channel (no redraw between
+    rounds, so each round re-solves the identical K*N instance batch —
+    the regime the `WarmStartCache` exists for).  The cold tier solves
+    every round from scratch; the warm tier carries one cache across
+    rounds, so round 1 populates it and every later round's hard
+    residual resolves from the exact tier without entering the B&B.
+
+    Parity is asserted BEFORE any timing: warm selections / energies /
+    feasibility must be bit-identical to the cold solver for every
+    (round, layer), and warm node counts can only shrink.  The artifact
+    records the measured split (`warm_hits`, `warm_easy`,
+    `hard_before`, `hard_after`) and the cold-vs-warm round-time delta;
+    the ≥50% hard-residual reduction is a hard claim gated in `main`.
+    """
+    from repro.distributed.sharding import make_batch_mesh
+    from repro.schedulers.sharded import sharded_des_select_batch
+
+    gates, costs = _alpha_step_instances(k, n_tokens, seed)
+    flat = gates.reshape(k * n_tokens, k)
+    cost_rows = np.repeat(costs, n_tokens, axis=0)
+    mesh = make_batch_mesh()
+    qoses = [qos_z * gamma0 ** layer for layer in range(1, num_layers + 1)]
+
+    # ---- parity pass (untimed): warm ≡ cold for every (round, layer).
+    refs = {qos: des_lib.des_select_batch(flat, cost_rows, qos, d)
+            for qos in qoses}
+    cache = des_lib.WarmStartCache()
+    identical = True
+    rows = []
+    for rnd in range(1, rounds + 1):
+        for layer, qos in enumerate(qoses, start=1):
+            ws: dict = {}
+            res = sharded_des_select_batch(flat, cost_rows, qos, d,
+                                           mesh=mesh, stats=ws,
+                                           warm_cache=cache)
+            ref = refs[qos]
+            same = bool(
+                np.array_equal(res.selected, ref.selected)
+                and np.array_equal(res.energy, ref.energy)
+                and np.array_equal(res.feasible, ref.feasible)
+                and np.all(res.nodes_explored <= ref.nodes_explored))
+            identical &= same
+            rows.append({
+                "round": rnd,
+                "layer": layer,
+                "qos": round(qos, 6),
+                "warm_hits": ws.get("warm_hits", 0),
+                "warm_easy": ws.get("warm_easy", 0),
+                "hard_before": ws.get("hard_before", 0),
+                "hard_after": ws.get("hard_after", 0),
+                "bit_identical": same,
+            })
+
+    hard_before = int(sum(r["hard_before"] for r in rows))
+    hard_after = int(sum(r["hard_after"] for r in rows))
+
+    # ---- timed passes (parity already proven): cold rounds vs warm
+    # rounds through a fresh cache.
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for qos in qoses:
+            sharded_des_select_batch(flat, cost_rows, qos, d, mesh=mesh)
+    t_cold = time.perf_counter() - t0
+    timed_cache = des_lib.WarmStartCache()
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for qos in qoses:
+            sharded_des_select_batch(flat, cost_rows, qos, d, mesh=mesh,
+                                     warm_cache=timed_cache)
+    t_warm = time.perf_counter() - t0
+
+    summary = {
+        "k": k,
+        "n_tokens": n_tokens,
+        "max_experts": d,
+        "qos_schedule": {"z": qos_z, "gamma0": gamma0},
+        "rounds": rounds,
+        "coherent_channel": True,
+        "layers": rows,
+        "warm_hits_total": int(sum(r["warm_hits"] for r in rows)),
+        "warm_easy_total": int(sum(r["warm_easy"] for r in rows)),
+        "hard_before": hard_before,
+        "hard_after": hard_after,
+        "hard_residual_ratio": round(hard_after / max(hard_before, 1), 4),
+        "cold_ms_total": round(t_cold * 1e3, 3),
+        "warm_ms_total": round(t_warm * 1e3, 3),
+        "round_time_delta_ms": round((t_cold - t_warm) * 1e3 / rounds, 3),
+        "bit_identical": identical,
+    }
+    if verbose:
+        print(f"{'round':>6}{'layer':>6}{'qos':>8}{'hits':>7}{'before':>8}"
+              f"{'after':>7}{'identical':>10}")
+        for r in rows:
+            print(f"{r['round']:>6}{r['layer']:>6}{r['qos']:>8.3f}"
+                  f"{r['warm_hits']:>7}{r['hard_before']:>8}"
+                  f"{r['hard_after']:>7}{str(r['bit_identical']):>10}")
+        print(f"hard residual {hard_before} -> {hard_after} "
+              f"({summary['hard_residual_ratio']:.0%}), "
+              f"round time {t_cold * 1e3 / rounds:.1f} ms -> "
+              f"{t_warm * 1e3 / rounds:.1f} ms")
+    return summary
+
+
 _MULTIHOST_WORKER = r"""
 import json, sys
 proc_id, port, k, n_tokens, d, num_layers, reps, seed = (
@@ -549,6 +659,15 @@ def main() -> None:
             summary["async"] = run_async_sweep(
                 k=args.k, n_tokens=args.n_tokens, d=args.max_experts,
                 reps=reps, depth=args.depth)
+            summary["warm_start"] = run_warm_start_sweep(
+                k=args.k, n_tokens=args.n_tokens, d=args.max_experts)
+            summary["claims"] = {
+                # ≥50% of the gamma-annealed hard residual resolved by the
+                # carried cache on the coherent-channel round sequence.
+                "warm_start_resolves_hard_residual":
+                    summary["warm_start"]["hard_after"]
+                    <= 0.5 * summary["warm_start"]["hard_before"],
+            }
         if args.multihost:
             summary["multihost"] = run_multihost_sweep(
                 k=args.k, n_tokens=args.n_tokens, d=args.max_experts,
@@ -557,10 +676,13 @@ def main() -> None:
         with open(out, "w") as fh:
             json.dump(summary, fh, indent=2)
         print(f"wrote {out}")
-        for key in ("async", "multihost"):
+        for key in ("async", "warm_start", "multihost"):
             if key in summary and not summary[key]["bit_identical"]:
                 raise SystemExit(
                     f"{key} sweep diverged from des_select_batch")
+        for claim, ok in summary.get("claims", {}).items():
+            if not ok:
+                raise SystemExit(f"claim failed: {claim}")
         return
     if args.sharded:
         # Must be decided before jax initializes its backend: give the

@@ -123,6 +123,7 @@ def des_select(
     max_experts: int,
     *,
     force_include: Optional[np.ndarray] = None,
+    upper_bound: float = np.inf,
 ) -> DESResult:
     """Exact Algorithm 1 (DES) for one hidden state.
 
@@ -133,11 +134,25 @@ def des_select(
       max_experts: D.
       force_include: optional (K,) bool — experts that must be selected
         (e.g. a shared expert / in-situ expert); they consume D slots.
+      upper_bound: optional warm-start incumbent energy carried from a
+        near-identical instance (a previous protocol round / BCD
+        iteration / QoS-annealing layer).  A *valid* bound — one at or
+        above this instance's true optimum — only tightens pruning:
+        selections, energies, and feasibility stay bit-identical to the
+        cold solve and ``nodes_explored`` can only decrease.  The bound
+        prunes on the safe side (``bound >= upper_bound + 1e-12``), so
+        even ``upper_bound == optimum`` cannot clip the optimal path;
+        a stale too-tight bound (below the optimum) is detected after
+        the search — no solution within the bound was found — and the
+        instance is transparently re-solved cold.
     """
     t = np.asarray(scores, dtype=np.float64)
     e = _sanitize(costs)
     k = t.shape[0]
     d = int(max_experts)
+    ub = float(upper_bound)
+    if np.isnan(ub):
+        ub = np.inf
 
     forced = (
         np.zeros(k, dtype=bool)
@@ -222,8 +237,14 @@ def des_select(
             continue
 
         # LP bound over undecided experts [j, K) given committed state.
+        # The warm bound prunes on the SAFE side (>= ub + 1e-12): every
+        # ancestor of the optimal leaf has bound <= E* <= ub for a valid
+        # ub, so the optimal path is never cut — only provably-worse
+        # subtrees are.  The incumbent e_min stays selection-backed (it
+        # is never seeded from ub), so the returned solution is always a
+        # real selection found by this search.
         bound = _node_bound(j, tt, ee, qos, ts, es)
-        if bound >= e_min - 1e-12:
+        if bound >= e_min - 1e-12 or bound >= ub + 1e-12:
             pruned += 1
             continue
 
@@ -238,6 +259,15 @@ def des_select(
             queue.append(
                 (j + 1, tt, ee, n_exc, n_inc + 1, exc_bits, inc_bits | (1 << j))
             )
+
+    # Stale-bound detection: a valid ub (>= this instance's optimum E*)
+    # guarantees the search finds an incumbent with e_min = E* <= ub.
+    # Ending with no incumbent, or one above the bound, certifies the
+    # injected ub was BELOW the optimum (stale — e.g. carried across a
+    # channel redraw) and the pruned search is unreliable: re-solve cold.
+    if np.isfinite(ub) and (sel_min is None or e_min > ub + 1e-12):
+        return des_select(scores, costs, qos, max_experts,
+                          force_include=force_include)
 
     if sel_min is None:  # should not happen (feasibility pre-checked)
         sel_min = top_d_fallback(t, e, d)
@@ -300,6 +330,8 @@ def des_select_batch(
     *,
     force_include: Optional[np.ndarray] = None,
     deduplicate: bool = True,
+    upper_bound: Optional[np.ndarray | float] = None,
+    warm_cache: Optional["WarmStartCache"] = None,
 ) -> DESBatchResult:
     """Exact Algorithm 1 (DES) for a batch of B independent instances.
 
@@ -328,6 +360,14 @@ def des_select_batch(
       max_experts: D (shared across the batch).
       force_include: optional (B, K) bool — per-instance must-select mask.
       deduplicate: solve only unique instances and scatter (default).
+      upper_bound: optional scalar or (B,) warm-start incumbent energies
+        (see `des_select`): a valid per-row bound only tightens pruning
+        — results stay bit-identical, node counts may only decrease —
+        and a stale bound is detected and re-solved cold.
+      warm_cache: optional `WarmStartCache` extending dedup ACROSS calls
+        (protocol rounds / layers / BCD iterations): exact repeats are
+        answered from the cache with zero B&B nodes, and structurally
+        identical rows at a different QoS contribute warm incumbents.
     """
     t, e_raw, z, forced = _batch_inputs(scores, costs, qos, force_include)
     b, k = t.shape
@@ -338,6 +378,18 @@ def des_select_batch(
         return DESBatchResult(np.zeros((0, k), dtype=bool),
                               np.zeros(0), np.zeros(0, dtype=bool), zero, zero)
 
+    ub = (None if upper_bound is None else
+          np.broadcast_to(np.asarray(upper_bound, dtype=np.float64),
+                          (b,)).copy())
+    if ub is not None:
+        ub[np.isnan(ub)] = np.inf
+        if not np.isfinite(ub).any():
+            ub = None
+
+    if warm_cache is not None:
+        return _warm_cached_solve(warm_cache, t, e_raw, z, forced, d,
+                                  ub, deduplicate)
+
     if deduplicate:
         # Sanitized costs + the finite-mask fully determine the solver's
         # behaviour (+inf and a literal _BIG cost row must NOT collapse:
@@ -347,9 +399,16 @@ def des_select_batch(
                          z[:, None], forced.astype(np.float64)])
         uniq_idx, inverse = _dedup_rows(key)
         if uniq_idx is not None and len(uniq_idx) < b:
+            ub_u = None
+            if ub is not None:
+                # duplicate rows are identical instances, so any row's
+                # valid bound is valid for the whole group: take the min.
+                ub_u = np.full(len(uniq_idx), np.inf)
+                np.minimum.at(ub_u, inverse, ub)
             sub = des_select_batch(
                 t[uniq_idx], e_raw[uniq_idx], z[uniq_idx], d,
-                force_include=forced[uniq_idx], deduplicate=False)
+                force_include=forced[uniq_idx], deduplicate=False,
+                upper_bound=ub_u)
             return DESBatchResult(
                 sub.selected[inverse], sub.energy[inverse],
                 sub.feasible[inverse], sub.nodes_explored[inverse],
@@ -398,8 +457,9 @@ def des_select_batch(
     es = np.take_along_axis(el, order, axis=1)
     forced_s = np.take_along_axis(fl, order, axis=1)
 
+    ub_l = None if ub is None else ub[live]
     sel_sorted, has_inc, exp_l, prn_l = _branch_and_bound_batch(
-        ts, es, zl, d, forced_s)
+        ts, es, zl, d, forced_s, upper_bound=ub_l)
 
     # Map back to original expert order + recompute energies exactly as
     # the sequential solver does (masked gather-sum semantics).
@@ -417,6 +477,22 @@ def des_select_batch(
         energy[rows] = _masked_row_sums(e[rows], orig_sel)
         feasible[rows] = True
     explored[live], pruned[live] = exp_l, prn_l
+
+    # Stale-bound detection (batched twin of des_select): rows whose warm
+    # bound admitted no incumbent at or below it were given a bound BELOW
+    # their optimum — re-solve those rows cold.
+    if ub_l is not None:
+        bad = np.isfinite(ub_l) & (~has_inc | (energy[live] > ub_l + 1e-12))
+        if bad.any():
+            rows = live[np.flatnonzero(bad)]
+            sub = des_select_batch(t[rows], e_raw[rows], z[rows], d,
+                                   force_include=forced[rows],
+                                   deduplicate=False)
+            selected[rows] = sub.selected
+            energy[rows] = sub.energy
+            feasible[rows] = sub.feasible
+            explored[rows] = sub.nodes_explored
+            pruned[rows] = sub.nodes_pruned
     return DESBatchResult(selected, energy, feasible, explored, pruned)
 
 
@@ -445,6 +521,172 @@ def _dedup_rows(key: np.ndarray) -> tuple[Optional[np.ndarray], np.ndarray]:
     inverse = np.empty(b, dtype=np.int64)
     inverse[sort_idx] = group_of_sorted
     return sort_idx[new_group], inverse
+
+
+def _warm_keys(t, e_raw, z, forced, d):
+    """Cache keys for a batch of instances.  `full` is the `_dedup_rows`
+    dedup key extended with a max_experts column (D is constant within
+    one call but the cache spans calls); `struct` additionally drops the
+    QoS column — rows identical up to z share cached selections as warm
+    incumbents across the z*gamma^(l) annealing schedule."""
+    e_san = _sanitize_batch(e_raw)
+    fin = np.isfinite(e_raw).astype(np.float64)
+    fcol = forced.astype(np.float64)
+    dcol = np.full((t.shape[0], 1), float(d))
+    full = np.hstack([t, e_san, fin, z[:, None], fcol, dcol])
+    struct = np.hstack([t, e_san, fin, fcol, dcol])
+    return full, struct
+
+
+class WarmStartCache:
+    """Cross-call amortization for `des_select_batch`: extends the
+    within-call `_dedup_rows` dedup ACROSS protocol rounds, layers, and
+    BCD iterations.
+
+    Two tiers, both keyed by the `_dedup_rows` hashing scheme (float dot
+    against fixed Gaussian weights, every hash hit verified element-wise
+    so a collision can only cost a miss, never a wrong answer):
+
+      * exact tier — the full instance key (scores, sanitized costs,
+        finite-mask, qos, forced, D).  A hit replays the stored
+        selection/energy/feasibility bit-identically with ZERO B&B nodes
+        (``nodes_explored == nodes_pruned == 0``).
+      * structure tier — the same key minus qos.  A feasible cached
+        selection whose coverage still meets the new qos is a valid warm
+        incumbent (same costs => bit-equal energy), injected as
+        `upper_bound=` into the cold solve of the missing rows; the
+        solver's stale-bound detection makes an invalidated-by-channel
+        bound safe (it falls back to the cold solve automatically).
+
+    The cache holds plain host numpy and is NOT thread-safe; schedulers
+    use it from the single resolver thread.  `invalidate()` must be
+    called whenever the cost model changes out from under the keys —
+    e.g. a channel redraw or an expert-churn mask flip (the serving
+    frontend does this automatically).
+    """
+
+    def __init__(self, max_entries: int = 65536):
+        self.max_entries = int(max_entries)
+        self._exact: dict = {}    # hash -> [(key_row, sel, energy, feas)]
+        self._struct: dict = {}   # hash -> [(key_row, energy, coverage)]
+        self._n = 0
+        self._weights: dict = {}  # key width -> Gaussian hash weights
+        self.stats = {"lookups": 0, "exact_hits": 0, "bound_hits": 0,
+                      "stores": 0, "invalidations": 0}
+
+    def __len__(self) -> int:
+        return self._n
+
+    def invalidate(self) -> None:
+        """Drop every entry (channel redraw / churn / new cost model)."""
+        self._exact.clear()
+        self._struct.clear()
+        self._n = 0
+        self.stats["invalidations"] += 1
+
+    def _hash(self, key: np.ndarray) -> np.ndarray:
+        # same deliberate-constant hash definition as `_dedup_rows`
+        w = key.shape[1]
+        if w not in self._weights:
+            weights = np.random.default_rng(0xDE5).standard_normal(w)
+            self._weights[w] = weights
+        return key @ self._weights[w]
+
+    def match(self, full_key: np.ndarray):
+        """Exact-tier lookup: (hit (B,) bool, sel (B, K'), energy (B,),
+        feasible (B,)) — sel columns sized from the stored rows."""
+        b = full_key.shape[0]
+        h = self._hash(full_key)
+        k = (full_key.shape[1] - 2) // 4
+        hit = np.zeros(b, dtype=bool)
+        sel = np.zeros((b, k), dtype=bool)
+        energy = np.zeros(b, dtype=np.float64)
+        feasible = np.zeros(b, dtype=bool)
+        self.stats["lookups"] += b
+        for i in range(b):
+            for krow, srow, en, fe in self._exact.get(h[i], ()):
+                if np.array_equal(krow, full_key[i]):
+                    hit[i], sel[i], energy[i], feasible[i] = (
+                        True, srow, en, fe)
+                    break
+        self.stats["exact_hits"] += int(hit.sum())
+        return hit, sel, energy, feasible
+
+    def bounds(self, struct_key: np.ndarray, z: np.ndarray) -> np.ndarray:
+        """Structure-tier lookup: per-row warm upper bounds (B,), +inf
+        where no cached selection of the same structure still covers the
+        row's qos `z`."""
+        b = struct_key.shape[0]
+        h = self._hash(struct_key)
+        ub = np.full(b, np.inf)
+        for i in range(b):
+            for krow, en, cov in self._struct.get(h[i], ()):
+                if cov >= z[i] and en < ub[i] and np.array_equal(
+                        krow, struct_key[i]):
+                    ub[i] = en
+        self.stats["bound_hits"] += int(np.isfinite(ub).sum())
+        return ub
+
+    def store(self, full_key, struct_key, scores, selected, energy,
+              feasible) -> None:
+        """Insert solved rows (deduplicated first — callers pass raw
+        batches).  Infeasible Remark-2 rows enter the exact tier only:
+        their fallback selection is not a valid incumbent."""
+        uniq_idx, _ = _dedup_rows(full_key)
+        rows = np.arange(full_key.shape[0]) if uniq_idx is None else uniq_idx
+        if self._n + 2 * rows.size > self.max_entries:
+            # Simple wholesale eviction: the working set of one serving
+            # round is far below max_entries, so this only fires under
+            # pathological churn where stale entries would never hit.
+            self._exact.clear()
+            self._struct.clear()
+            self._n = 0
+        hf = self._hash(full_key[rows])
+        hs = self._hash(struct_key[rows])
+        coverage = (scores[rows] * selected[rows]).sum(axis=1)
+        for i, r in enumerate(rows):
+            self._exact.setdefault(hf[i], []).append(
+                (full_key[r].copy(), selected[r].copy(),
+                 float(energy[r]), bool(feasible[r])))
+            self._n += 1
+            if feasible[r]:
+                self._struct.setdefault(hs[i], []).append(
+                    (struct_key[r].copy(), float(energy[r]),
+                     float(coverage[i])))
+                self._n += 1
+        self.stats["stores"] += int(rows.size)
+
+
+def _warm_cached_solve(cache, t, e_raw, z, forced, d, ub, deduplicate):
+    """`des_select_batch` body when a `WarmStartCache` is attached: serve
+    exact repeats from the cache (zero B&B nodes), solve the misses cold
+    with cache-derived warm upper bounds, then store the fresh rows."""
+    b, k = t.shape
+    full_key, struct_key = _warm_keys(t, e_raw, z, forced, d)
+    hit, sel_c, en_c, fe_c = cache.match(full_key)
+    selected = np.zeros((b, k), dtype=bool)
+    energy = np.zeros(b, dtype=np.float64)
+    feasible = np.zeros(b, dtype=bool)
+    explored = np.zeros(b, dtype=np.int64)
+    pruned = np.zeros(b, dtype=np.int64)
+    selected[hit] = sel_c[hit]
+    energy[hit] = en_c[hit]
+    feasible[hit] = fe_c[hit]
+    miss = np.flatnonzero(~hit)
+    if miss.size:
+        ub_c = cache.bounds(struct_key[miss], z[miss])
+        ub_m = ub_c if ub is None else np.minimum(ub[miss], ub_c)
+        sub = des_select_batch(
+            t[miss], e_raw[miss], z[miss], d, force_include=forced[miss],
+            deduplicate=deduplicate, upper_bound=ub_m)
+        selected[miss] = sub.selected
+        energy[miss] = sub.energy
+        feasible[miss] = sub.feasible
+        explored[miss] = sub.nodes_explored
+        pruned[miss] = sub.nodes_pruned
+        cache.store(full_key[miss], struct_key[miss], t[miss],
+                    sub.selected, sub.energy, sub.feasible)
+    return DESBatchResult(selected, energy, feasible, explored, pruned)
 
 
 def _masked_row_sums(values: np.ndarray, mask: np.ndarray) -> np.ndarray:
@@ -531,7 +773,7 @@ def _node_bound_batch(j: int, tt: np.ndarray, ee: np.ndarray,
     return energy
 
 
-def _branch_and_bound_batch(ts, es, qos, d, forced_s):
+def _branch_and_bound_batch(ts, es, qos, d, forced_s, upper_bound=None):
     """Frontier-parallel B&B over F pre-screened-feasible instances.
 
     All instances share depth: level j holds every live node whose next
@@ -540,8 +782,16 @@ def _branch_and_bound_batch(ts, es, qos, d, forced_s):
     Node visit order within an instance is exactly the sequential BFS
     order, so incumbents, pruning, and node counts match `des_select`.
     Returns (sel_sorted (F, K), has_incumbent (F,), explored, pruned).
+
+    `upper_bound` is an optional (F,) array of warm-start incumbent
+    energies: nodes whose LP bound reaches ``ub + 1e-12`` are cut in
+    addition to the incumbent rule (Scheme of `des_select`); the
+    incumbent state itself is never seeded from it, and the caller
+    performs stale-bound detection on the returned energies.
     """
     f, k = ts.shape
+    ubv = (np.full(f, np.inf) if upper_bound is None
+           else np.asarray(upper_bound, dtype=np.float64))
     # Uniform QoS (one sweep = one threshold) skips all per-node gathers.
     qu: Optional[float] = float(qos[0]) if (qos == qos[0]).all() else None
     qv = qu if qu is not None else qos
@@ -628,7 +878,7 @@ def _branch_and_bound_batch(ts, es, qos, d, forced_s):
             bval[fresh] = _node_bound_batch(
                 j, btt[fresh], bee[fresh], qu if qu is not None else qos,
                 ts, es, bi[fresh])
-        cut = bval >= binc - 1e-12
+        cut = (bval >= binc - 1e-12) | (bval >= ubv[bi] + 1e-12)
         if cut.any():
             pruned_lists.append(bi[cut])
             keep_local = np.flatnonzero(~cut)

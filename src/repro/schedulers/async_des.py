@@ -36,6 +36,7 @@ Three consumers:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import threading
 import weakref
@@ -102,9 +103,15 @@ class AsyncDESPipeline:
     # ------------------------------------------------------------------
     def submit(self, scores, costs, qos, max_experts, *,
                force_include=None, deduplicate: bool = True,
-               stats: Optional[dict] = None) -> PendingRound:
+               stats: Optional[dict] = None,
+               warm_cache: Optional[des_lib.WarmStartCache] = None
+               ) -> PendingRound:
         """Dispatch one round's device pre-work now (non-blocking) and
-        queue its host finish behind the rounds already in flight."""
+        queue its host finish behind the rounds already in flight.
+
+        `warm_cache` is only ever touched by the single worker thread,
+        which finishes rounds strictly in submission order — so the
+        cache state every round observes is deterministic."""
         if self._closed:
             raise RuntimeError("pipeline is closed")
         self._slots.acquire()
@@ -113,16 +120,17 @@ class AsyncDESPipeline:
                                     force_include=force_include,
                                     mesh=self.mesh)
             future = self._worker.submit(
-                self._finish, handle, deduplicate, stats)
+                self._finish, handle, deduplicate, stats, warm_cache)
         except BaseException:
             self._slots.release()
             raise
         return PendingRound(future, handle.batch)
 
-    def _finish(self, handle, deduplicate, stats):
+    def _finish(self, handle, deduplicate, stats, warm_cache=None):
         try:
             return resolve_prework(handle, collect_prework(handle),
-                                   deduplicate=deduplicate, stats=stats)
+                                   deduplicate=deduplicate, stats=stats,
+                                   warm_cache=warm_cache)
         finally:
             self._slots.release()
 
@@ -136,6 +144,51 @@ class AsyncDESPipeline:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """One auto-tuned pipelining decision: `depth` in-flight rounds
+    (the `AsyncDESPipeline` backpressure window) and `rounds` chunks per
+    sweep (`async_des_select_batch`'s split).  Frozen + hashable so
+    configs can be compared and logged."""
+
+    depth: int
+    rounds: int
+
+
+#: PipelineConfig used before any stats exist (first sweep of a fresh
+#: policy) — the classic double-buffering default.
+DEFAULT_PIPELINE_CONFIG = PipelineConfig(depth=2, rounds=2)
+
+
+def auto_tune_pipeline(last_stats: Optional[Dict[str, int]]
+                       ) -> PipelineConfig:
+    """Pick pipeline depth / chunk count from a previous sweep's measured
+    resolution split — a PURE function of `last_stats` (same dict in,
+    same config out; no clocks, no randomness: asserted by
+    tests/test_async_des.py across repeated runs).
+
+    The logic follows where the overlap win lives: pipelining hides host
+    B&B time behind device pre-work, so the useful depth grows with the
+    fraction of the batch that lands in the hard residual.  A nearly
+    all-easy split gets no overlap benefit (chunking only adds dispatch
+    overhead -> depth 1, unchunked); a hard-dominated split keeps the
+    host busy enough to triple-buffer.  `hard_after` (the residual left
+    AFTER the warm-start tiers) is used when present, so a cache that
+    absorbs the repeats also shrinks the pipeline.
+    """
+    if not last_stats or not last_stats.get("batch"):
+        return DEFAULT_PIPELINE_CONFIG
+    hard = int(last_stats.get("hard_after", last_stats.get("hard", 0)))
+    frac = hard / float(last_stats["batch"])
+    if frac <= 0.02:
+        return PipelineConfig(depth=1, rounds=1)
+    if frac <= 0.25:
+        return PipelineConfig(depth=2, rounds=2)
+    if frac <= 0.6:
+        return PipelineConfig(depth=2, rounds=3)
+    return PipelineConfig(depth=3, rounds=4)
 
 
 def _merge_stats(stats: Optional[dict], chunk_stats: List[dict]) -> None:
@@ -167,6 +220,7 @@ def async_des_select_batch(
     stats: Optional[dict] = None,
     rounds: int = 2,
     pipeline: Optional[AsyncDESPipeline] = None,
+    warm_cache: Optional[des_lib.WarmStartCache] = None,
 ) -> des_lib.DESBatchResult:
     """Drop-in `des_select_batch` that pipelines one batch as `rounds`
     contiguous chunks: chunk r+1's jitted pre-work overlaps chunk r's
@@ -177,6 +231,11 @@ def async_des_select_batch(
     pipeline: reuse a caller-owned `AsyncDESPipeline` (keeps its worker
     and backpressure across calls); otherwise a temporary one is built
     around `mesh` and closed before returning.
+
+    warm_cache: optional cross-round `WarmStartCache`, threaded to
+    `resolve_prework` on the pipeline's single worker thread (rounds
+    finish in submission order, so the cache evolution every chunk sees
+    is deterministic — and answers are bit-identical either way).
     """
     t, e_raw, z, forced = des_lib._batch_inputs(
         scores, costs, qos, force_include)
@@ -185,7 +244,8 @@ def async_des_select_batch(
         from repro.schedulers.sharded import sharded_des_select_batch
         return sharded_des_select_batch(
             t, e_raw, z, max_experts, force_include=forced,
-            deduplicate=deduplicate, mesh=mesh, stats=stats)
+            deduplicate=deduplicate, mesh=mesh, stats=stats,
+            warm_cache=warm_cache)
 
     bounds = np.linspace(0, b, min(rounds, b) + 1).astype(int)
     own = pipeline is None
@@ -199,7 +259,7 @@ def async_des_select_batch(
             pending.append(pipe.submit(
                 t[lo:hi], e_raw[lo:hi], z[lo:hi], max_experts,
                 force_include=forced[lo:hi], deduplicate=deduplicate,
-                stats=cs))
+                stats=cs, warm_cache=warm_cache))
         parts = [p.result() for p in pending]
     finally:
         if own:
@@ -220,24 +280,45 @@ class AsyncShardedDESPolicy(ShardedDESPolicy):
     each sweep's chunks double-buffered so the host B&B of chunk r
     overlaps the device pre-work of chunk r+1.
 
-    depth: in-flight rounds AND chunks per sweep (default 2).  The
-    pipeline (one worker thread) is created lazily and owned by the
-    policy; `close()` joins it.  `last_stats` accumulates the easy/hard
-    split exactly like the sharded policy.
+    depth: in-flight rounds AND chunks per sweep; `None` (the default)
+    enables ADAPTIVE mode — each `schedule` call picks its
+    `PipelineConfig` via `auto_tune_pipeline` from the previous call's
+    measured easy/hard split (`last_stats` snapshot), recreating the
+    pipeline only when the tuned depth changes.  Either mode yields
+    bit-identical schedules (chunking never changes per-row results);
+    the tuner only moves wall-clock.  The pipeline (one worker thread)
+    is created lazily and owned by the policy; `close()` joins it.
+    `last_stats` accumulates the easy/hard split exactly like the
+    sharded policy; `last_config` records the config the most recent
+    schedule ran with.
     """
 
-    def __init__(self, *, mesh=None, depth: int = 2, max_iters: int = 20,
-                 beta_method: str = "auto", qos: Optional[float] = None):
+    def __init__(self, *, mesh=None, depth: Optional[int] = None,
+                 max_iters: int = 20, beta_method: str = "auto",
+                 qos: Optional[float] = None,
+                 warm_cache: Optional[des_lib.WarmStartCache] = None):
         super().__init__(mesh=mesh, max_iters=max_iters,
-                         beta_method=beta_method, qos=qos)
+                         beta_method=beta_method, qos=qos,
+                         warm_cache=warm_cache)
         self.depth = depth
         self._pipeline: Optional[AsyncDESPipeline] = None
+        self._tune_stats: Optional[Dict[str, int]] = None
+        self.last_config: PipelineConfig = self._config()
 
-    @property
-    def pipeline(self) -> AsyncDESPipeline:
+    def _config(self) -> PipelineConfig:
+        """The PipelineConfig the next sweep will run with: fixed ctor
+        depth when given, else auto-tuned from the previous schedule's
+        stats snapshot (a pure function — determinism is tested)."""
+        if self.depth is not None:
+            return PipelineConfig(depth=self.depth, rounds=self.depth)
+        return auto_tune_pipeline(self._tune_stats)
+
+    def _pipeline_for(self, depth: int) -> AsyncDESPipeline:
+        if self._pipeline is not None and self._pipeline.depth != depth:
+            self._pipeline.close()
+            self._pipeline = None
         if self._pipeline is None:
-            self._pipeline = AsyncDESPipeline(mesh=self.mesh,
-                                              depth=self.depth)
+            self._pipeline = AsyncDESPipeline(mesh=self.mesh, depth=depth)
             # Consumers that get the policy from the registry never call
             # close(); reclaim the worker thread when the policy dies so
             # long-lived servers can't accumulate idle executors.
@@ -245,10 +326,24 @@ class AsyncShardedDESPolicy(ShardedDESPolicy):
                              self._pipeline, False)
         return self._pipeline
 
+    @property
+    def pipeline(self) -> AsyncDESPipeline:
+        return self._pipeline_for(self._config().depth)
+
     def _batch_solver(self, stats: Dict[str, int]):
+        cfg = self._config()
         return functools.partial(
             async_des_select_batch, mesh=self.mesh, stats=stats,
-            rounds=self.depth, pipeline=self.pipeline)
+            rounds=cfg.rounds, pipeline=self._pipeline_for(cfg.depth),
+            warm_cache=self.warm_cache)
+
+    def schedule(self, ctx):
+        # Snapshot BEFORE the base class resets last_stats: the tuner
+        # feeds on the previous round's measured split.
+        if self.last_stats:
+            self._tune_stats = dict(self.last_stats)
+        self.last_config = self._config()
+        return super().schedule(ctx)
 
     def close(self) -> None:
         """Join the pipeline worker (idempotent)."""

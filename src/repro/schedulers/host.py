@@ -45,7 +45,8 @@ def _allocate_beta(alpha: np.ndarray, ctx: ScheduleContext,
 
 
 def _des_sweep(gate_scores: np.ndarray, costs: np.ndarray, qos: float,
-               max_experts: int, *, solver=None) -> tuple[np.ndarray, int]:
+               max_experts: int, *, solver=None,
+               warm_cache=None) -> tuple[np.ndarray, int]:
     """Exact DES for every (source i, token n) at once; returns
     (alpha, nodes).  All K*N instances go through one batched-solver call
     (default `des_lib.des_select_batch`: dedup + frontier-parallel B&B) —
@@ -53,18 +54,27 @@ def _des_sweep(gate_scores: np.ndarray, costs: np.ndarray, qos: float,
 
     `solver` swaps in a drop-in batched front-end with the same signature
     and `DESBatchResult` contract (the device-sharded
-    `repro.schedulers.sharded.sharded_des_select_batch` is one)."""
+    `repro.schedulers.sharded.sharded_des_select_batch` is one).
+
+    `warm_cache` (a `repro.core.des.WarmStartCache`) is forwarded to the
+    solver so incumbents carry across sweeps — along the per-layer
+    z*gamma^(l) annealing schedule, across BCD iterations, and across
+    protocol rounds.  Cached answers stay bit-identical to the cold
+    sweep; only node counts shrink.  Passed as a kwarg only when set, so
+    drop-in solvers without the parameter keep working cold."""
     if solver is None:
         solver = des_lib.des_select_batch
+    kwargs = {} if warm_cache is None else {"warm_cache": warm_cache}
     k, n_tok, n_exp = gate_scores.shape
     flat = np.asarray(gate_scores, dtype=np.float64).reshape(k * n_tok, n_exp)
     active = flat.sum(axis=1) > 0  # padding tokens are never scheduled
     cost_rows = np.repeat(np.asarray(costs, dtype=np.float64), n_tok, axis=0)
     if active.all():
-        res = solver(flat, cost_rows, qos, max_experts)
+        res = solver(flat, cost_rows, qos, max_experts, **kwargs)
         alpha = res.selected.astype(np.int8)
     elif active.any():
-        res = solver(flat[active], cost_rows[active], qos, max_experts)
+        res = solver(flat[active], cost_rows[active], qos, max_experts,
+                     **kwargs)
         alpha = np.zeros((k * n_tok, n_exp), dtype=np.int8)
         alpha[active] = res.selected.astype(np.int8)
     else:
@@ -100,10 +110,18 @@ class JESAPolicy(SchedulerPolicy):
     """
 
     def __init__(self, *, max_iters: int = 20, beta_method: str = "auto",
-                 qos: Optional[float] = None):
+                 qos: Optional[float] = None,
+                 warm_cache: Optional[des_lib.WarmStartCache] = None):
         self.max_iters = max_iters
         self.beta_method = beta_method
         self.qos = qos  # None -> use ctx.qos (the layer schedule)
+        # Optional cross-round B&B amortization (off by default so the
+        # registry-constructed policy stays the reference cold solver):
+        # the cache carries incumbents across BCD iterations, layers of
+        # the z*gamma^(l) schedule, and protocol rounds.  The OWNER of
+        # the cache is responsible for `invalidate()` on channel redraw /
+        # churn (the serving frontend does both).
+        self.warm_cache = warm_cache
 
     def effective_qos(self, ctx: ScheduleContext) -> float:
         return ctx.qos if self.qos is None else self.qos
@@ -113,7 +131,8 @@ class JESAPolicy(SchedulerPolicy):
         """The alpha-step solver — subclass hook so drop-in batched
         front-ends (e.g. `ShardedDESPolicy`) can reroute the sweep
         without touching the BCD loop."""
-        return _des_sweep(gate_scores, costs, qos, max_experts)
+        return _des_sweep(gate_scores, costs, qos, max_experts,
+                          warm_cache=self.warm_cache)
 
     def schedule(self, ctx: ScheduleContext) -> RoundSchedule:
         k, n_tok, _ = ctx.gate_scores.shape

@@ -178,6 +178,7 @@ def resolve_prework(
     *,
     deduplicate: bool = True,
     stats: Optional[dict] = None,
+    warm_cache: Optional[des_lib.WarmStartCache] = None,
 ) -> des_lib.DESBatchResult:
     """Host-side finish of a collected pre-work round.
 
@@ -185,6 +186,16 @@ def resolve_prework(
     outputs and sends only the hard residual through the host
     frontier-parallel branch-and-bound — bit-identical to
     `repro.core.des.des_select_batch` on the whole batch.
+
+    With a `WarmStartCache` attached the hard residual shrinks three
+    ways, none of which may change an answer: exact cross-round repeats
+    replay from the cache with zero B&B nodes; a warm incumbent that
+    already meets the in-graph root Eq. 11-12 LP bound (and is met by
+    the greedy seed) reclassifies the row as easy — resolved from the
+    device pre-work outputs, mirroring the host solver's immediate
+    root prune bit-for-bit; the remaining rows run the host B&B with the
+    warm incumbent injected as `upper_bound=`.  `stats` gains
+    {warm_hits, warm_easy, hard_before, hard_after}.
     """
     t, e_raw, z, forced = handle.t, handle.e_raw, handle.z, handle.forced
     b, k = t.shape
@@ -194,7 +205,8 @@ def resolve_prework(
         if stats is not None:
             stats.update(
                 n_devices=int(np.prod(tuple(handle.mesh.shape.values()))),
-                batch=0, easy=0, hard=0, infeasible=0, forced_rows=0)
+                batch=0, easy=0, hard=0, infeasible=0, forced_rows=0,
+                warm_hits=0, warm_easy=0, hard_before=0, hard_after=0)
         zero = np.zeros(0, dtype=np.int64)
         return des_lib.DESBatchResult(
             np.zeros((0, k), dtype=bool), np.zeros(0),
@@ -240,18 +252,70 @@ def resolve_prework(
         explored[rows] = 1
         pruned[rows] = 1
 
-    # Hard residual: gather back to the host frontier-parallel B&B.
+    # Hard residual: gather back to the host frontier-parallel B&B —
+    # after the warm-start tiers have taken their cut.
     hard = ~infeasible & ~easy
     hard_rows = np.flatnonzero(hard)
-    if hard_rows.size:
+    warm_hits = warm_easy = 0
+    bnb_rows = hard_rows
+    ub_b = None
+    if warm_cache is not None and hard_rows.size:
+        full_key, struct_key = des_lib._warm_keys(
+            t[hard_rows], e_raw[hard_rows], z[hard_rows],
+            forced[hard_rows], d)
+        hit, sel_c, en_c, fe_c = warm_cache.match(full_key)
+        if hit.any():
+            rows = hard_rows[hit]
+            selected[rows] = sel_c[hit]
+            energy[rows] = en_c[hit]
+            feasible[rows] = fe_c[hit]
+            warm_hits = int(hit.sum())
+        miss = np.flatnonzero(~hit)
+        bnb_rows = hard_rows[miss]
+        if miss.size:
+            ub = warm_cache.bounds(struct_key[miss], z[bnb_rows])
+            # Reclassify-easy: `root_bound >= ub + 1e-12` makes the host
+            # warm solver prune the root immediately and keep the greedy
+            # seed, provided the seed passes the stale-bound check — the
+            # exact semantics replayed here from the in-graph outputs.
+            rb = pw["root_bound"][bnb_rows]
+            se = pw["seed_energy"][bnb_rows]
+            easy_w = (np.isfinite(ub) & (rb >= ub + 1e-12)
+                      & (se <= ub + 1e-12))
+            if easy_w.any():
+                rows = bnb_rows[easy_w]
+                sel = pw["easy_sel"][rows]
+                selected[rows] = sel
+                energy[rows] = des_lib._masked_row_sums(e[rows], sel)
+                feasible[rows] = True
+                explored[rows] = 1
+                pruned[rows] = 1
+                warm_cache.store(full_key[miss][easy_w],
+                                 struct_key[miss][easy_w], t[rows],
+                                 selected[rows], energy[rows],
+                                 feasible[rows])
+                miss = miss[~easy_w]
+                ub_b = ub[~easy_w]
+                bnb_rows = hard_rows[miss]
+                warm_easy = int(easy_w.sum())
+            else:
+                ub_b = ub
+    if bnb_rows.size:
         sub = des_lib.des_select_batch(
-            t[hard_rows], e_raw[hard_rows], z[hard_rows], d,
-            force_include=forced[hard_rows], deduplicate=deduplicate)
-        selected[hard_rows] = sub.selected
-        energy[hard_rows] = sub.energy
-        feasible[hard_rows] = sub.feasible
-        explored[hard_rows] = sub.nodes_explored
-        pruned[hard_rows] = sub.nodes_pruned
+            t[bnb_rows], e_raw[bnb_rows], z[bnb_rows], d,
+            force_include=forced[bnb_rows], deduplicate=deduplicate,
+            upper_bound=ub_b)
+        selected[bnb_rows] = sub.selected
+        energy[bnb_rows] = sub.energy
+        feasible[bnb_rows] = sub.feasible
+        explored[bnb_rows] = sub.nodes_explored
+        pruned[bnb_rows] = sub.nodes_pruned
+        if warm_cache is not None:
+            fk, sk = des_lib._warm_keys(
+                t[bnb_rows], e_raw[bnb_rows], z[bnb_rows],
+                forced[bnb_rows], d)
+            warm_cache.store(fk, sk, t[bnb_rows], sub.selected,
+                             sub.energy, sub.feasible)
 
     if stats is not None:
         stats.update(
@@ -261,6 +325,10 @@ def resolve_prework(
             hard=int(hard_rows.size),
             infeasible=int(infeasible.sum()),
             forced_rows=int(forced_rows.size),
+            warm_hits=warm_hits,
+            warm_easy=warm_easy,
+            hard_before=int(hard_rows.size),
+            hard_after=int(bnb_rows.size),
         )
     return des_lib.DESBatchResult(selected, energy, feasible,
                                   explored, pruned)
@@ -276,6 +344,7 @@ def sharded_des_select_batch(
     deduplicate: bool = True,
     mesh=None,
     stats: Optional[dict] = None,
+    warm_cache: Optional[des_lib.WarmStartCache] = None,
 ) -> des_lib.DESBatchResult:
     """Drop-in `des_select_batch` with device-sharded jitted pre-work.
 
@@ -285,8 +354,11 @@ def sharded_des_select_batch(
       mesh:  a 1-D ("batch",) `jax.sharding.Mesh` to shard over
              (default: all local devices via `make_batch_mesh`).
       stats: optional dict, filled with the resolution split
-             {n_devices, batch, easy, hard, infeasible, forced_rows} —
-             `easy` instances never touch host numpy per-instance code.
+             {n_devices, batch, easy, hard, infeasible, forced_rows,
+             warm_hits, warm_easy, hard_before, hard_after} — `easy`
+             instances never touch host numpy per-instance code.
+      warm_cache: optional cross-round `WarmStartCache` (see
+             `resolve_prework`) — answers stay bit-identical.
 
     Equivalent to `submit_prework` -> `collect_prework` ->
     `resolve_prework` back to back; use those directly (or
@@ -296,7 +368,8 @@ def sharded_des_select_batch(
     handle = submit_prework(scores, costs, qos, max_experts,
                             force_include=force_include, mesh=mesh)
     return resolve_prework(handle, collect_prework(handle),
-                           deduplicate=deduplicate, stats=stats)
+                           deduplicate=deduplicate, stats=stats,
+                           warm_cache=warm_cache)
 
 
 @register_policy("sharded-des", aliases=("des-sharded",))
@@ -315,9 +388,10 @@ class ShardedDESPolicy(JESAPolicy):
     """
 
     def __init__(self, *, mesh=None, max_iters: int = 20,
-                 beta_method: str = "auto", qos: Optional[float] = None):
+                 beta_method: str = "auto", qos: Optional[float] = None,
+                 warm_cache: Optional[des_lib.WarmStartCache] = None):
         super().__init__(max_iters=max_iters, beta_method=beta_method,
-                         qos=qos)
+                         qos=qos, warm_cache=warm_cache)
         self.mesh = mesh
         self.last_stats: Dict[str, int] = {}
 
@@ -326,7 +400,8 @@ class ShardedDESPolicy(JESAPolicy):
         through — subclass hook for the pipelined / multi-process tiers
         (`repro.schedulers.async_des`)."""
         return functools.partial(
-            sharded_des_select_batch, mesh=self.mesh, stats=stats)
+            sharded_des_select_batch, mesh=self.mesh, stats=stats,
+            warm_cache=self.warm_cache)
 
     def _alpha_sweep(self, gate_scores, costs, qos, max_experts):
         stats: Dict[str, int] = {}

@@ -221,6 +221,19 @@ class FrontendConfig:
     seed: int = 0
     record_trace: bool = False
     debug_checks: bool = False        # ScheduleContext numeric sanitizers
+    # --- cross-round B&B amortization (pool mode) -----------------
+    # Attach a `repro.core.des.WarmStartCache` to the policy so exact
+    # DES instances repeat across decode rounds / layers / BCD
+    # iterations resolve from the cache (bit-identical answers, zero
+    # B&B nodes) and structure-repeats inject warm incumbents.  The
+    # frontend owns the invalidation rules: the cache is dropped on
+    # every channel redraw and on any expert-churn alive-mask change
+    # (entries keyed on stale costs would never hit, and a fixed-point
+    # selection under the old channel is not a valid incumbent
+    # certificate under the new one).  Off by default — the cold path
+    # stays the reference.  Only DES-family policies with a
+    # `warm_cache` attribute participate; others serve unchanged.
+    warm_start: bool = False
 
 
 # ----------------------------------------------------------------------
@@ -293,6 +306,16 @@ class ServingFrontend:
                 f"comp_coeff must have shape ({self.k},), "
                 f"got {self.comp_coeff.shape}")
         self.s0 = 8192.0
+        #: Cross-round warm-start cache (pool mode, cfg.warm_start):
+        #: created here, attached to the policy's `warm_cache` hook, and
+        #: invalidated by the serve loop on channel redraw / churn.
+        self.warm_cache = None
+        if (cfg.warm_start and self.mode == "pool"
+                and hasattr(self.policy, "warm_cache")):
+            from repro.core import des as des_lib
+            if self.policy.warm_cache is None:
+                self.policy.warm_cache = des_lib.WarmStartCache()
+            self.warm_cache = self.policy.warm_cache
         #: sim mode: the exact (K, N) token batches fed to the simulator,
         #: in order — an offline DMoESimulator replay of these batches
         #: must reproduce every schedule bit for bit (the parity gate).
@@ -384,6 +407,9 @@ class ServingFrontend:
         prefilled = [False] * self.slots
         now = 0.0
         occupancy_sum = 0
+        prev_alive = np.ones(self.k, dtype=bool)
+        if self.warm_cache is not None:
+            self.warm_cache.invalidate()   # fresh serve, fresh channel
 
         def admit_arrivals() -> None:
             while queue and queue[0].arrive_s <= now + 1e-12:
@@ -427,6 +453,14 @@ class ServingFrontend:
                         self.channel_cfg, gains)
                 alive = churn.step() if churn is not None \
                     else np.ones(self.k, dtype=bool)
+                if self.warm_cache is not None:
+                    # invalidation rules (see FrontendConfig.warm_start):
+                    # fresh fading draw or a flipped alive mask voids
+                    # every cached incumbent
+                    if cfg.redraw_channel or not np.array_equal(
+                            alive, prev_alive):
+                        self.warm_cache.invalidate()
+                    prev_alive = alive
 
                 gates = np.zeros((self.k, n_max, self.k))
                 for s, req in enumerate(live):
@@ -626,6 +660,10 @@ class ServingFrontend:
         last = getattr(self.policy, "last_stats", None)
         if last:
             report.scheduler_stats = dict(last)
+        if self.warm_cache is not None:
+            report.scheduler_stats.update(
+                {f"warm_cache_{k}": v
+                 for k, v in self.warm_cache.stats.items()})
 
 
 def serve_workload(policy: str, pool: ExpertPool,

@@ -11,10 +11,13 @@ from _hyp_compat import given, settings, st
 from repro.core import des as des_lib
 from repro.schedulers import get_policy
 from repro.schedulers.async_des import (
+    DEFAULT_PIPELINE_CONFIG,
     AsyncDESPipeline,
     AsyncShardedDESPolicy,
     MultihostDESPolicy,
+    PipelineConfig,
     async_des_select_batch,
+    auto_tune_pipeline,
 )
 
 
@@ -153,6 +156,94 @@ def test_empty_batch_and_single_round_passthrough():
     t, e, qos = _instances(9, 3, 5)
     res = async_des_select_batch(t, e, qos, 2, rounds=1)
     _assert_result_equal(res, des_lib.des_select_batch(t, e, qos, 2))
+
+
+def test_auto_tuner_pure_function_of_stats():
+    """`auto_tune_pipeline` is a pure function of the stats dict — no
+    clocks, no randomness: every bucket maps to one config and repeated
+    calls on the same input agree."""
+    cases = [
+        (None, DEFAULT_PIPELINE_CONFIG),
+        ({}, DEFAULT_PIPELINE_CONFIG),
+        ({"batch": 0, "hard": 5}, DEFAULT_PIPELINE_CONFIG),
+        ({"batch": 100, "hard": 0}, PipelineConfig(depth=1, rounds=1)),
+        ({"batch": 100, "hard": 2}, PipelineConfig(depth=1, rounds=1)),
+        ({"batch": 100, "hard": 20}, PipelineConfig(depth=2, rounds=2)),
+        ({"batch": 100, "hard": 50}, PipelineConfig(depth=2, rounds=3)),
+        ({"batch": 100, "hard": 90}, PipelineConfig(depth=3, rounds=4)),
+        # hard_after (the residual AFTER warm-start tiers) wins over hard
+        ({"batch": 100, "hard": 90, "hard_after": 1},
+         PipelineConfig(depth=1, rounds=1)),
+    ]
+    for stats, want in cases:
+        got = [auto_tune_pipeline(dict(stats) if stats else stats)
+               for _ in range(5)]
+        assert all(g == want for g in got), (stats, got)
+
+
+def test_adaptive_policy_parity_and_tuning():
+    """depth=None (the registry default) auto-tunes chunking per round —
+    schedules stay bit-identical to jesa/sharded-des, the first sweep
+    runs the default config, and every later sweep (tuned from the same
+    measured split of an identical ctx) picks the same config."""
+    from repro.core import channel as channel_lib
+    from repro.schedulers import ScheduleContext
+
+    k, n_tok = 4, 6
+    rng = np.random.default_rng(11)
+    gates = rng.dirichlet(np.ones(k), size=(k, n_tok))
+    ccfg = channel_lib.ChannelConfig(num_experts=k, num_subcarriers=16)
+    rates = channel_lib.subcarrier_rates(
+        ccfg, channel_lib.sample_channel_gains(ccfg, rng))
+
+    def ctx():
+        return ScheduleContext(gate_scores=gates, rates=rates, qos=0.4,
+                               max_experts=2,
+                               rng=np.random.default_rng(0))
+
+    rs_jesa = get_policy("jesa").schedule(ctx())
+    rs_shard = get_policy("sharded-des").schedule(ctx())
+    policy = get_policy("async-des")
+    assert isinstance(policy, AsyncShardedDESPolicy)
+    assert policy.depth is None
+    assert policy.last_config == DEFAULT_PIPELINE_CONFIG
+    try:
+        configs = []
+        for trial in range(5):
+            rs = policy.schedule(ctx())
+            configs.append(policy.last_config)
+            for ref in (rs_jesa, rs_shard):
+                np.testing.assert_array_equal(rs.alpha, ref.alpha,
+                                              err_msg=f"trial {trial}")
+                np.testing.assert_array_equal(rs.beta, ref.beta)
+                assert rs.energy == ref.energy
+                assert rs.des_nodes == ref.des_nodes
+                assert rs.iterations == ref.iterations
+        assert configs[0] == DEFAULT_PIPELINE_CONFIG
+        # identical ctx -> identical measured split -> identical tuning
+        assert len(set(configs[1:])) == 1
+        assert configs[1] == auto_tune_pipeline(policy.last_stats)
+    finally:
+        policy.close()
+
+
+def test_adaptive_pipeline_recreated_only_on_depth_change():
+    """The worker pipeline is rebuilt exactly when the tuned depth moves;
+    a rounds-only change keeps the live worker."""
+    policy = AsyncShardedDESPolicy(depth=None)
+    try:
+        p_default = policy.pipeline
+        assert p_default.depth == DEFAULT_PIPELINE_CONFIG.depth
+        policy._tune_stats = {"batch": 100, "hard_after": 1}   # -> (1, 1)
+        p_small = policy.pipeline
+        assert p_small.depth == 1 and p_small is not p_default
+        policy._tune_stats = {"batch": 100, "hard_after": 50}  # -> (2, 3)
+        p_two = policy.pipeline
+        assert p_two.depth == 2 and p_two is not p_small
+        policy._tune_stats = {"batch": 100, "hard_after": 20}  # -> (2, 2)
+        assert policy.pipeline is p_two  # depth unchanged: same worker
+    finally:
+        policy.close()
 
 
 def test_multihost_policy_single_process_fallback():

@@ -138,6 +138,23 @@ def test_paper_map_covers_public_functions(module):
     assert not missing, f"paper_map.md missing: {missing}"
 
 
+def test_no_bytecode_tracked_in_git():
+    """Compiled bytecode must never be committed: it is host/interpreter
+    specific and silently shadows source review.  `.gitignore` carries
+    the rule; this guard fails the suite if any *.pyc (or __pycache__
+    content) ever lands in the index again."""
+    import subprocess
+    out = subprocess.run(["git", "ls-files"], cwd=REPO,
+                         capture_output=True, text=True)
+    if out.returncode != 0:  # not a git checkout (e.g. exported tarball)
+        pytest.skip("not a git work tree")
+    offenders = [line for line in out.stdout.splitlines()
+                 if line.endswith(".pyc") or "__pycache__" in line]
+    assert not offenders, f"bytecode tracked in git: {offenders}"
+    gitignore = (REPO / ".gitignore").read_text()
+    assert "__pycache__/" in gitignore and "*.pyc" in gitignore
+
+
 def test_policy_lists_do_not_drift():
     """Registering a policy without documenting it is a test failure:
     every `repro.schedulers.available_policies()` name must have a
