@@ -1,9 +1,32 @@
 """Micro-benchmarks of the Pallas kernels vs their jnp oracles
 (interpret mode on CPU — numbers are correctness-path timings, the
-real perf target is the TPU lowering; derived column reports allclose)."""
+real perf target is the TPU lowering; derived column reports allclose).
+
+The fused-routing section times the three `routing_impl` dispatch
+pipelines of `repro.models.moe` (the "unfused" XLA one-hot einsums vs
+the fused capacity-layout and grouped/ragged Pallas paths from
+`repro.kernels.moe_route`) on a quick shape grid in the regime the
+kernels target — capacity-bound shapes where the (G, gsz, E, cap)
+one-hot materialization dominates.  Two hard-gated claims ride on it:
+
+* ``fused_route_allclose`` — fused/grouped outputs match the XLA
+  reference (and the `fused_route` kernel matches `selection.route`);
+* ``fused_dispatch_speedup_ge_1`` — fused AND grouped are >= 1.0x the
+  unfused wall-clock (best-of-reps) on every quick-grid shape.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--quick]
+        [--out BENCH_kernels.json]
+
+writes ``BENCH_kernels.json`` (the CI artifact) and exits non-zero if
+any claim fails.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -11,7 +34,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer
+from repro.core import selection as sel_lib
 from repro.kernels import ops, ref
+from repro.models import moe as moe_mod
+
+#: quick shape grid for the fused-routing rows — dense-one-hot-dominated
+#: shapes (cap ~ gsz/2, top-2 of 8 experts) where the fusion honestly
+#: pays even on the CPU interpret path
+ROUTING_GRID = (
+    dict(g=1, gsz=1536, e=8, d=128, f=256, cap=768),
+    dict(g=1, gsz=2048, e=8, d=128, f=256, cap=1024),
+)
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -23,7 +56,86 @@ def _time(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def run(verbose: bool = True, seed: int = 0):
+def _time_min(fn, *args, reps=5):
+    """Best-of-reps wall-clock (us) — the stable statistic the speedup
+    claim is gated on."""
+    fn(*args).block_until_ready()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _routing_problem(shape, seed):
+    g, gsz, e, d, f, cap = (shape[k] for k in
+                            ("g", "gsz", "e", "d", "f", "cap"))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(g, gsz, d)).astype(np.float32))
+    params = {
+        "w1": jnp.asarray((rng.normal(size=(e, d, f)) * 0.05)
+                          .astype(np.float32)),
+        "wu": jnp.asarray((rng.normal(size=(e, d, f)) * 0.05)
+                          .astype(np.float32)),
+        "w2": jnp.asarray((rng.normal(size=(e, f, d)) * 0.05)
+                          .astype(np.float32)),
+    }
+    logits = jnp.asarray(rng.normal(size=(g * gsz, e)).astype(np.float32))
+    cb, mk = sel_lib.route(logits, routing="topk", top_k=2)
+    return (x, params, logits, mk.reshape(g, gsz, e),
+            cb.reshape(g, gsz, e).astype(jnp.float32), cap)
+
+
+def run_routing(verbose: bool = True, seed: int = 0, reps: int = 5):
+    """Fused-vs-unfused routing rows + the two gated claims."""
+    rows, out_rows = [], []
+    route_ok, parity_ok, speedup_ok = True, True, True
+    for shape in ROUTING_GRID:
+        x, params, logits, mk, cw, cap = _routing_problem(shape, seed)
+
+        # the fused top-k route kernel vs the selection.route reference
+        cb_k, mk_k = ops.fused_route(logits, top_k=2)
+        cb_r, mk_r = sel_lib.route(logits, routing="topk", top_k=2)
+        route_ok &= bool(np.array_equal(np.asarray(mk_k),
+                                        np.asarray(mk_r)))
+        route_ok &= bool(np.allclose(np.asarray(cb_k), np.asarray(cb_r),
+                                     atol=2e-6))
+
+        impls = {
+            name: jax.jit(lambda p, xx, m, c, fn=fn:
+                          fn(p, xx, m, c, cap, jnp.float32)[0])
+            for name, fn in (
+                ("unfused", moe_mod._dispatch_ffn_xla),
+                ("fused", moe_mod._dispatch_ffn_fused),
+                ("grouped", moe_mod._dispatch_ffn_grouped))
+        }
+        outs = {n: f(params, x, mk, cw) for n, f in impls.items()}
+        for n in ("fused", "grouped"):
+            parity_ok &= bool(np.allclose(np.asarray(outs[n]),
+                                          np.asarray(outs["unfused"]),
+                                          atol=2e-4, rtol=1e-3))
+        us = {n: _time_min(f, params, x, mk, cw, reps=reps)
+              for n, f in impls.items()}
+        tag = f"gsz{shape['gsz']}_e{shape['e']}_cap{shape['cap']}"
+        for n in ("unfused", "fused", "grouped"):
+            speedup = us["unfused"] / us[n]
+            if n != "unfused":
+                speedup_ok &= speedup >= 1.0
+            rows.append((f"route_{n}_{tag}", us[n],
+                         f"speedup={speedup:.2f}x"))
+            out_rows.append({"kernel": f"route_{n}", "shape": shape,
+                             "us": us[n], "speedup_vs_unfused": speedup})
+    claims = {"fused_route_allclose": route_ok and parity_ok,
+              "fused_dispatch_speedup_ge_1": speedup_ok}
+    if verbose:
+        for name, us, d in rows:
+            print(f"{name:<34}{us:>12.0f} us   {d}")
+        print("routing claims:", claims)
+    return rows, out_rows, claims
+
+
+def run(verbose: bool = True, seed: int = 0, routing_reps: int = 5):
     rows = []
     out_rows = []
     ks = jax.random.split(jax.random.PRNGKey(seed), 8)
@@ -74,8 +186,34 @@ def run(verbose: bool = True, seed: int = 0):
         for name, us, d in rows:
             print(f"{name:<26}{us:>12.0f} us   {d}")
     claims = {"all_allclose": all(r["ok"] for r in out_rows)}
+
+    r_rows, r_out, r_claims = run_routing(verbose=verbose, seed=seed,
+                                          reps=routing_reps)
+    rows.extend(r_rows)
+    out_rows.extend(r_out)
+    claims.update(r_claims)
     return rows, out_rows, claims
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing reps (CI artifact mode)")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    rows, out_rows, claims = run(verbose=True, seed=0,
+                                 routing_reps=3 if args.quick else 5)
+    summary = {"bench": "kernels", "quick": args.quick,
+               "routing_grid": [dict(s) for s in ROUTING_GRID],
+               "rows": out_rows, "claims": claims}
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(summary, fh, indent=2)
+        print(f"wrote {args.out}")
+    bad = [name for name, ok in claims.items() if ok is False]
+    if bad:
+        raise SystemExit(f"kernel bench claims failed: {bad}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

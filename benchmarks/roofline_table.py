@@ -1,5 +1,12 @@
 """Roofline table: reads the dry-run artifacts (launch/dryrun.py must have
-run) and prints the three roofline terms per (arch x shape x mesh)."""
+run) and prints the three roofline terms per (arch x shape x mesh).
+
+Also prints an analytic fused-vs-unfused HBM-traffic table for the MoE
+routing dispatch (`repro.kernels.moe_route` vs the one-hot einsum path)
+on the `benchmarks.kernel_bench` quick grid: the unfused path
+materializes the (G, gsz, E, cap) one-hot dispatch/combine operands
+twice, while the fused kernels stream x/y once per (expert, group)
+program — the byte ratio is shape-derived, no artifacts needed."""
 
 from __future__ import annotations
 
@@ -28,19 +35,74 @@ def load_rows(mesh: str = None, include_variants: bool = False):
     return rows
 
 
+def routing_rows(dtype_bytes: int = 4):
+    """Analytic HBM bytes of one MoE dispatch+combine round-trip per
+    routing impl, on the kernel_bench quick grid.
+
+    unfused: one-hot (G,gsz,E,cap) is built and read by BOTH the
+    dispatch and the combine einsum, alongside x in / (E,G,cap,d)
+    out (and back).  fused: the Pallas kernels read x + int32 pos/keep
+    per (expert, group) program and write the capacity layout once each
+    way.  grouped: same plus the ragged (total, d) buffer round-trip
+    (total ~ E*G*cap block-padded).
+    """
+    from benchmarks.kernel_bench import ROUTING_GRID
+
+    rows = []
+    for s in ROUTING_GRID:
+        g, gsz, e, d, cap = s["g"], s["gsz"], s["e"], s["d"], s["cap"]
+        tok = g * gsz * d * dtype_bytes           # x or y, read/written once
+        caplay = e * g * cap * d * dtype_bytes    # (E, G, cap, d)
+        onehot = g * gsz * e * cap * dtype_bytes  # (G, gsz, E, cap)
+        idx = 2 * g * gsz * e * 4                 # pos + keep, int32/f32
+        unfused = 2 * onehot + 2 * tok + 2 * caplay
+        fused = 2 * tok + 2 * caplay + e * idx    # idx re-read per expert
+        grouped = fused + 2 * caplay              # ragged buffer round-trip
+        rows.append({
+            "shape": dict(s), "unfused_bytes": unfused,
+            "fused_bytes": fused, "grouped_bytes": grouped,
+            "fused_ratio": unfused / fused,
+            "grouped_ratio": unfused / grouped,
+        })
+    return rows
+
+
+def _format_routing(rows) -> str:
+    lines = ["routing dispatch HBM traffic (analytic, fp32):",
+             f"{'shape':<28}{'unfused':>10}{'fused':>10}{'grouped':>10}"
+             f"{'fused x':>9}{'grouped x':>11}"]
+    for r in rows:
+        s = r["shape"]
+        tag = f"gsz{s['gsz']}_e{s['e']}_cap{s['cap']}_d{s['d']}"
+        lines.append(
+            f"{tag:<28}{r['unfused_bytes']/1e6:>9.1f}M"
+            f"{r['fused_bytes']/1e6:>9.1f}M"
+            f"{r['grouped_bytes']/1e6:>9.1f}M"
+            f"{r['fused_ratio']:>8.1f}x{r['grouped_ratio']:>10.1f}x")
+    return "\n".join(lines)
+
+
 def run(verbose: bool = True):
     with Timer() as t:
         rows = load_rows()
+        r_rows = routing_rows()
     if verbose:
         if not rows:
             print("no dry-run artifacts found — run "
                   "`python -m repro.launch.dryrun --all` first")
         else:
             print(rl.format_table(rows))
+        print(_format_routing(r_rows))
     n_ok = len(rows)
-    claims = {"artifacts_present": n_ok > 0, "num_pairs": n_ok}
+    claims = {"artifacts_present": n_ok > 0, "num_pairs": n_ok,
+              "fused_routing_bytes_lt_unfused": all(
+                  r["fused_ratio"] > 1.0 and r["grouped_ratio"] > 1.0
+                  for r in r_rows)}
     return [("roofline_table", t.us / max(n_ok, 1),
-             f"pairs={n_ok}")], rows, claims
+             f"pairs={n_ok}"),
+            ("roofline_routing", t.us / max(len(r_rows), 1),
+             ";".join(f"fused={r['fused_ratio']:.1f}x" for r in r_rows)),
+            ], {"dryrun": rows, "routing": r_rows}, claims
 
 
 if __name__ == "__main__":

@@ -23,7 +23,12 @@ Rules
   differently on real TPUs than in interpret mode.
 
 The analysis is call-site local, resolving one level of ``grid = (...)``
-name indirection inside the same file.
+name indirection inside the same file.  Sites that pass ``grid_spec=``
+instead of ``grid=`` (``pltpu.PrefetchScalarGridSpec`` / ``pl.GridSpec``,
+again through one level of name binding) are checked too: their
+``in_specs``/``out_specs`` live on the grid-spec call, and every
+``index_map`` takes ``num_scalar_prefetch`` prefetched operands *in
+addition to* one index per grid axis.
 """
 
 from __future__ import annotations
@@ -68,6 +73,20 @@ def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
     for kw in call.keywords:
         if kw.arg == name:
             return kw.value
+    return None
+
+
+#: grid-spec constructors whose in/out specs + grid replace the
+#: ``pallas_call`` kwargs (``pl.GridSpec``, ``pltpu.PrefetchScalarGridSpec``)
+_GRIDSPEC_NAMES = ("GridSpec", "PrefetchScalarGridSpec")
+
+
+def _int_literal(node: Optional[ast.AST],
+                 names: Dict[str, ast.AST]) -> Optional[int]:
+    if isinstance(node, ast.Name) and node.id in names:
+        node = names[node.id]
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
     return None
 
 
@@ -124,7 +143,8 @@ class PallasKernelChecker(Checker):
         for node in ast.walk(sf.tree):
             if isinstance(node, ast.Assign) and len(node.targets) == 1 \
                     and isinstance(node.targets[0], ast.Name) \
-                    and isinstance(node.value, (ast.Tuple, ast.List)):
+                    and isinstance(node.value,
+                                   (ast.Tuple, ast.List, ast.Call)):
                 names[node.targets[0].id] = node.value
 
         for node in ast.walk(sf.tree):
@@ -137,22 +157,40 @@ class PallasKernelChecker(Checker):
     def _check_site(self, sf: SourceFile, call: ast.Call,
                     names: Dict[str, ast.AST]) -> List[Finding]:
         out: List[Finding] = []
-        grid_rank = _tuple_len(_kw(call, "grid"), names)
+        grid_node = _kw(call, "grid")
+        in_specs_node = _kw(call, "in_specs")
+        out_specs_node = _kw(call, "out_specs")
+        prefetch = 0
+        gs = _kw(call, "grid_spec")
+        if isinstance(gs, ast.Name) and gs.id in names:
+            gs = names[gs.id]
+        if isinstance(gs, ast.Call) and jaxast.dotted_name(
+                gs.func).rsplit(".", 1)[-1] in _GRIDSPEC_NAMES:
+            grid_node = _kw(gs, "grid") or grid_node
+            in_specs_node = _kw(gs, "in_specs") or in_specs_node
+            out_specs_node = _kw(gs, "out_specs") or out_specs_node
+            prefetch = _int_literal(
+                _kw(gs, "num_scalar_prefetch"), names) or 0
+        grid_rank = _tuple_len(grid_node, names)
 
-        specs = list(_iter_blockspecs(_kw(call, "in_specs")))
-        out_specs = list(_iter_blockspecs(_kw(call, "out_specs")))
+        specs = list(_iter_blockspecs(in_specs_node))
+        out_specs = list(_iter_blockspecs(out_specs_node))
         for spec in specs + out_specs:
             shape, imap, has_ms = _blockspec_parts(spec)
             block_rank = _tuple_len(shape, names)
             if imap is not None and grid_rank is not None:
                 arity = _lambda_arity(imap)
-                if arity is not None and arity != grid_rank:
+                want = grid_rank + prefetch
+                if arity is not None and arity != want:
+                    extra = (f" + {prefetch} scalar-prefetch operands"
+                             if prefetch else "")
                     out.append(self.finding(
                         sf, spec, "PAL001", Severity.ERROR,
-                        f"index_map takes {arity} grid indices but the "
-                        f"grid has {grid_rank} dimensions",
+                        f"index_map takes {arity} parameters but the "
+                        f"grid has {grid_rank} dimensions{extra}",
                         "one non-defaulted index_map parameter per "
-                        "grid axis (closure captures go in defaults)"))
+                        "grid axis, then one per prefetched scalar "
+                        "(closure captures go in defaults)"))
             if imap is not None and block_rank is not None:
                 ret = _lambda_return_rank(imap)
                 if ret is not None and ret != block_rank:

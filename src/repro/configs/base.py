@@ -28,6 +28,15 @@ class MoEConfig:
     # stays hashable.  Resolve with `resolve_routing_policy(cfg)`.
     routing: str = "topk"
     routing_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    # token-dispatch implementation for the MoE FFN hot path:
+    #   "xla"     — one-hot dispatch/combine einsums (default; the
+    #               historical path, SPMD lowers them to all-to-alls);
+    #   "fused"   — Pallas fused route + gather-dispatch + weighted
+    #               combine over the capacity layout (no one-hot);
+    #   "grouped" — Pallas ragged layout (tokens sorted by expert id,
+    #               per-expert offsets) with the scalar-prefetch FFN.
+    # Vocabulary lives in `repro.kernels.moe_route.ROUTING_IMPLS`.
+    routing_impl: str = "xla"
     qos_z: float = 1.0
     qos_gamma0: float = 0.7           # gamma^(l) = gamma0^l
     max_experts: int = 0              # D (0 -> top_k)

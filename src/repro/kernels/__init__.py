@@ -4,11 +4,25 @@ oracle in ref.py and a jit wrapper in ops.py:
   flash_attention — blockwise online-softmax attention (causal/window/GQA)
   flash_decode    — single-query decode attention over long KV caches
   moe_ffn         — fused per-expert SwiGLU FFN over the capacity layout
+  moe_route       — fused routing family: gate → policy-mask → top-k →
+                    dispatch/combine over the capacity layout, plus the
+                    grouped/ragged layout with a scalar-prefetch FFN
   rwkv_scan       — chunked RWKV6 WKV recurrence (MXU-friendly)
 """
 
-from repro.kernels.ops import (flash_attention, flash_decode,
+from repro.kernels.moe_route import (ROUTING_IMPLS, GroupedLayout,
+                                     available_routing_impls,
+                                     capacity_combine, capacity_dispatch,
+                                     capacity_positions,
+                                     check_routing_impl, default_interpret,
+                                     grouped_dispatch, grouped_layout,
+                                     grouped_scatter, moe_expert_ffn_ragged)
+from repro.kernels.ops import (flash_attention, flash_decode, fused_route,
                                moe_expert_ffn, wkv_chunked)
 
 __all__ = ["flash_attention", "flash_decode", "moe_expert_ffn",
-           "wkv_chunked"]
+           "wkv_chunked", "fused_route", "capacity_positions",
+           "capacity_dispatch", "capacity_combine", "grouped_layout",
+           "grouped_dispatch", "grouped_scatter", "moe_expert_ffn_ragged",
+           "GroupedLayout", "ROUTING_IMPLS", "available_routing_impls",
+           "check_routing_impl", "default_interpret"]

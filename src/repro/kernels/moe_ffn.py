@@ -54,8 +54,16 @@ def _moe_ffn_kernel(x_ref, w1_ref, wu_ref, w2_ref, o_ref, acc_scr, *,
 
 
 def moe_expert_ffn(x, w1, w_up, w2, *, block_c: int = 128,
-                   block_f: int = 512, interpret: bool = True) -> jnp.ndarray:
-    """x: (E, C, d); w1/w_up: (E, d, f); w2: (E, f, d) -> (E, C, d)."""
+                   block_f: int = 512,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """x: (E, C, d); w1/w_up: (E, d, f); w2: (E, f, d) -> (E, C, d).
+
+    ``interpret=None`` auto-detects the backend (interpret mode
+    everywhere except a real TPU); pass an explicit bool to override.
+    """
+    from repro.kernels.moe_route import default_interpret
+    if interpret is None:
+        interpret = default_interpret()
     e, c, d = x.shape
     f = w1.shape[-1]
     block_c = min(block_c, c)

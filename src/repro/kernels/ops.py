@@ -1,8 +1,12 @@
 """jit'd public wrappers for the Pallas kernels.
 
-`interpret` defaults to True (this container is CPU-only; interpret mode
-executes the kernel body in Python for correctness validation).  On a
-real TPU pass interpret=False — same pallas_call, lowered via Mosaic.
+`interpret` semantics: the attention/RWKV wrappers default to True (this
+container is CPU-only; interpret mode executes the kernel body in Python
+for correctness validation) — on a real TPU pass interpret=False, same
+pallas_call lowered via Mosaic.  The MoE kernels (`moe_expert_ffn`,
+`fused_route`) default to `interpret=None`, which auto-detects via
+`repro.kernels.moe_route.default_interpret` (interpret everywhere except
+a TPU backend) and stays overridable per call.
 """
 
 from __future__ import annotations
@@ -15,6 +19,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.moe_ffn import moe_expert_ffn as _moe_ffn
+from repro.kernels.moe_route import fused_route as _fused_route
 from repro.kernels.rwkv_scan import wkv_chunked as _wkv
 
 
@@ -29,9 +34,17 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
 @functools.partial(jax.jit, static_argnames=("block_c", "block_f",
                                              "interpret"))
 def moe_expert_ffn(x, w1, w_up, w2, *, block_c=128, block_f=512,
-                   interpret=True):
+                   interpret=None):
     return _moe_ffn(x, w1, w_up, w2, block_c=block_c, block_f=block_f,
                     interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "block_t",
+                                             "interpret"))
+def fused_route(gate_logits, policy_mask=None, *, top_k=2, block_t=128,
+                interpret=None):
+    return _fused_route(gate_logits, policy_mask, top_k=top_k,
+                        block_t=block_t, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -29,6 +29,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import selection as sel_lib
+from repro.kernels import moe_route as mr
+from repro.kernels import ops as kops
 from repro.models import layers as L
 
 
@@ -81,13 +83,98 @@ def _router(params, x, cfg: ModelConfig, layer_idx, expert_costs):
     return combine, mask, aux
 
 
+def _dispatch_ffn_xla(params, xg, mk, cw, cap, act_dtype):
+    """Historical dispatch path: one-hot dispatch/combine einsums (XLA
+    SPMD lowers them to all-to-alls).  `routing_impl="xla"` — the
+    default; every op below is byte-for-byte the pre-knob hot path."""
+    # position of each token within its expert's capacity buffer
+    pos = jnp.cumsum(mk, axis=1) * mk - 1.0              # (G, gsz, E)
+    keep = (pos >= 0) & (pos < cap)
+    mk_kept = mk * keep
+    cw = cw * keep
+    aux = {"dropped_frac": 1.0 - (jnp.sum(mk_kept) /
+                                  jnp.maximum(jnp.sum(mk), 1.0)),
+           "dropped_tokens": jnp.sum(mk) - jnp.sum(mk_kept)}
+    pos = jnp.clip(pos, 0, cap - 1).astype(jnp.int32)
+    # one-hot over capacity slots — cast to the ACTIVATION dtype after the
+    # f32 mask multiply: an f32 `slot` upcasts xe and then forces f32
+    # copies of every expert weight in the FFN einsums (10 GB/device on
+    # deepseek-v3; EXPERIMENTS.md §Perf B).
+    slot = (jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+            * mk_kept[..., None]).astype(act_dtype)
+    # dispatch: (G, gsz, E, cap) x (G, gsz, d) -> (E, G, cap, d)
+    xe = jnp.einsum("gsec,gsd->egcd", slot, xg)
+
+    # --- expert FFN (E sharded on model axis) -------------------------
+    h = jnp.einsum("egcd,edf->egcf", xe, params["w1"])
+    u = jnp.einsum("egcd,edf->egcf", xe, params["wu"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(act_dtype) * u
+    ye = jnp.einsum("egcf,efd->egcd", h, params["w2"])
+
+    # --- combine back (combine tensor in activation dtype: the fp32
+    # variant doubled the cross-shard bytes of the combine einsum) ------
+    comb_t = (jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+              * cw[..., None]).astype(act_dtype)
+    yg = jnp.einsum("egcd,gsec->gsd", ye, comb_t)
+    return yg, aux
+
+
+def _drop_aux(mk, keep):
+    """Capacity-overflow accounting shared by the Pallas impls: ``keep``
+    already folds the mask, so kept mass is just its sum."""
+    return {"dropped_frac": 1.0 - (jnp.sum(keep) /
+                                   jnp.maximum(jnp.sum(mk), 1.0)),
+            "dropped_tokens": jnp.sum(mk) - jnp.sum(keep)}
+
+
+def _dispatch_ffn_fused(params, xg, mk, cw, cap, act_dtype):
+    """`routing_impl="fused"`: Pallas gather-dispatch straight into the
+    (E, G, cap, d) capacity layout + fused SwiGLU FFN + weighted combine
+    — the (G, gsz, E, cap) one-hot tensor is never materialized."""
+    g, gsz, d = xg.shape
+    e = mk.shape[-1]
+    pos, keep = mr.capacity_positions(mk, cap)
+    aux = _drop_aux(mk, keep)
+    cwk = cw * keep
+    xe = mr.capacity_dispatch(xg, pos, keep, cap)        # (E, G, cap, d)
+    ye = kops.moe_expert_ffn(xe.reshape(e, g * cap, d), params["w1"],
+                             params["wu"], params["w2"])
+    yg = mr.capacity_combine(ye.reshape(e, g, cap, d), cwk, pos, keep,
+                             out_dtype=act_dtype)
+    return yg, aux
+
+
+def _dispatch_ffn_grouped(params, xg, mk, cw, cap, act_dtype):
+    """`routing_impl="grouped"`: ragged layout (tokens sorted by expert
+    id at block-aligned per-expert offsets) + the scalar-prefetch ragged
+    FFN, which skips segment-padding blocks entirely — the win over the
+    dense capacity grid when token→expert loads are skewed."""
+    pos, keep = mr.capacity_positions(mk, cap)
+    aux = _drop_aux(mk, keep)
+    cwk = cw * keep
+    layout = mr.grouped_layout(pos, keep, cap)
+    xs = mr.grouped_dispatch(xg, layout)                 # (total, d)
+    ys = mr.moe_expert_ffn_ragged(xs, layout, params["w1"],
+                                  params["wu"], params["w2"])
+    yg = mr.grouped_scatter(ys, layout, cwk, pos, keep,
+                            out_dtype=act_dtype)
+    return yg, aux
+
+
+_DISPATCH_IMPLS = {"xla": _dispatch_ffn_xla, "fused": _dispatch_ffn_fused,
+                   "grouped": _dispatch_ffn_grouped}
+
+
 def moe_ffn(params, x, cfg: ModelConfig, layer_idx,
             expert_costs: Optional[jnp.ndarray] = None,
             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """MoE FFN. x: (B, S, d) -> (B, S, d), aux losses.
 
     layer_idx may be a traced int32 (inside lax.scan over layers) — the
-    QoS schedule gamma0**(l+1) stays traceable.
+    QoS schedule gamma0**(l+1) stays traceable.  The token-dispatch
+    implementation is selected by `cfg.moe.routing_impl` ("xla" one-hot
+    einsums by default; "fused"/"grouped" take the Pallas kernel family
+    in `repro.kernels.moe_route`).
     """
     b, s, d = x.shape
     m = cfg.moe
@@ -114,34 +201,9 @@ def moe_ffn(params, x, cfg: ModelConfig, layer_idx,
     mk = mask.reshape(g, gsz, e)
     cw = combine.reshape(g, gsz, e)
 
-    # position of each token within its expert's capacity buffer
-    pos = jnp.cumsum(mk, axis=1) * mk - 1.0              # (G, gsz, E)
-    keep = (pos >= 0) & (pos < cap)
-    mk = mk * keep
-    cw = cw * keep
-    aux["dropped_frac"] = 1.0 - (jnp.sum(mk) /
-                                 jnp.maximum(jnp.sum(mask), 1.0))
-    pos = jnp.clip(pos, 0, cap - 1).astype(jnp.int32)
-    # one-hot over capacity slots — cast to the ACTIVATION dtype after the
-    # f32 mask multiply: an f32 `slot` upcasts xe and then forces f32
-    # copies of every expert weight in the FFN einsums (10 GB/device on
-    # deepseek-v3; EXPERIMENTS.md §Perf B).
-    slot = (jax.nn.one_hot(pos, cap, dtype=jnp.float32)
-            * mk[..., None]).astype(x.dtype)
-    # dispatch: (G, gsz, E, cap) x (G, gsz, d) -> (E, G, cap, d)
-    xe = jnp.einsum("gsec,gsd->egcd", slot, xg)
-
-    # --- expert FFN (E sharded on model axis) -------------------------
-    h = jnp.einsum("egcd,edf->egcf", xe, params["w1"])
-    u = jnp.einsum("egcd,edf->egcf", xe, params["wu"])
-    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
-    ye = jnp.einsum("egcf,efd->egcd", h, params["w2"])
-
-    # --- combine back (combine tensor in activation dtype: the fp32
-    # variant doubled the cross-shard bytes of the combine einsum) ------
-    comb_t = (jax.nn.one_hot(pos, cap, dtype=jnp.float32)
-              * cw[..., None]).astype(x.dtype)
-    yg = jnp.einsum("egcd,gsec->gsd", ye, comb_t)
+    impl = mr.check_routing_impl(getattr(m, "routing_impl", "xla"))
+    yg, drop_aux = _DISPATCH_IMPLS[impl](params, xg, mk, cw, cap, x.dtype)
+    aux.update(drop_aux)
     y = yg.reshape(b, s, d).astype(x.dtype)
 
     if m.num_shared_experts > 0:

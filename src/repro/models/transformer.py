@@ -147,7 +147,7 @@ def _zero_aux():
     z = jnp.zeros((), jnp.float32)
     return {"load_balance_loss": z, "router_z_loss": z,
             "experts_per_token": z, "selected_gate_mass": z,
-            "dropped_frac": z}
+            "dropped_frac": z, "dropped_tokens": z}
 
 
 def _ffn_apply(ffn_params, h, cfg, layer_idx, is_moe, expert_costs):

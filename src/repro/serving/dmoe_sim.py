@@ -75,11 +75,27 @@ class DMoESimulator:
                  channel_process: Optional[
                      channel_lib.ChannelProcess] = None,
                  seed: int = 0, top_k: Optional[int] = None,
-                 count_backward: bool = True, overlap: bool = True):
+                 count_backward: bool = True, overlap: bool = True,
+                 routing_impl: str = "xla"):
         assert cfg.moe.num_experts >= 1 and cfg.arch_type == "moe"
         assert not cfg.mla, "simulator uses the plain GQA MoE block"
         self.cfg = cfg
         self.k = cfg.moe.num_experts
+        # Expert-FFN compute backend: "xla" keeps the historical dense
+        # einsums bit for bit; "fused" routes the same dense all-expert
+        # compute through the Pallas `repro.kernels.ops.moe_expert_ffn`
+        # kernel.  "grouped" is rejected — the protocol computes every
+        # expert's FFN for every token (the alpha-independent overlap
+        # trick above), so there is no ragged token→expert assignment to
+        # lay out.
+        if routing_impl not in ("xla", "fused"):
+            from repro.kernels.moe_route import check_routing_impl
+            check_routing_impl(routing_impl)   # unknown name → ValueError
+            raise ValueError(
+                "DMoESimulator computes the dense all-expert FFN (alpha-"
+                "independent overlap); routing_impl must be 'xla' or "
+                f"'fused', got {routing_impl!r}")
+        self.routing_impl = routing_impl
         # `scheme` is any registry name; a pre-constructed policy instance
         # (with custom kwargs) may be passed directly instead.
         self.policy = policy if policy is not None else get_policy(scheme)
@@ -113,7 +129,18 @@ class DMoESimulator:
         """Every expert's FFN output for every token: (K, N, E, d).
 
         Dense in the expert axis and independent of alpha, so it can be
-        dispatched before the scheduler decides the selection."""
+        dispatched before the scheduler decides the selection.  With
+        ``routing_impl="fused"`` the same all-expert compute runs through
+        the Pallas `moe_expert_ffn` kernel instead of the XLA einsums
+        (every token replicated into every expert's capacity row block)."""
+        if self.routing_impl == "fused":
+            b, s, d = h.shape
+            e = p["ffn"]["w1"].shape[0]
+            from repro.kernels import ops as kops
+            xs = jnp.broadcast_to(h.reshape(1, b * s, d), (e, b * s, d))
+            ye = kops.moe_expert_ffn(xs, p["ffn"]["w1"], p["ffn"]["wu"],
+                                     p["ffn"]["w2"])
+            return ye.reshape(e, b, s, d).transpose(1, 2, 0, 3)
         g1 = jnp.einsum("bsd,edf->bsef", h, p["ffn"]["w1"])
         u1 = jnp.einsum("bsd,edf->bsef", h, p["ffn"]["wu"])
         hh = jax.nn.silu(g1.astype(jnp.float32)).astype(h.dtype) * u1

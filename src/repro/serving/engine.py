@@ -44,7 +44,8 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 256, seed: int = 0,
-                 use_des_routing: Optional[Union[bool, str]] = None):
+                 use_des_routing: Optional[Union[bool, str]] = None,
+                 routing_impl: Optional[str] = None):
         # Routing policy comes from the registry: cfg.moe.routing names
         # it; `use_des_routing=True` forces the paper's greedy DES policy
         # by overriding the routing name the jitted model resolves, and a
@@ -73,6 +74,15 @@ class ServingEngine:
             if not same:
                 overrides["moe_routing_kwargs"] = ()
             cfg = cfg.with_overrides(**overrides)
+        # Token-dispatch implementation for the jitted MoE FFN: override
+        # cfg.moe.routing_impl ("xla" one-hot einsums, "fused"/"grouped"
+        # Pallas — see repro.kernels.moe_route).  None keeps the config's
+        # own setting.
+        if routing_impl is not None:
+            from repro.kernels.moe_route import check_routing_impl
+
+            cfg = cfg.with_overrides(
+                moe_routing_impl=check_routing_impl(routing_impl))
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len

@@ -32,3 +32,32 @@ def run_rank(x):
                                memory_space="smem"),  # PAL003: rank 1 != 2
         out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
     )(x)
+
+
+from jax.experimental.pallas import tpu as pltpu  # noqa: E402
+
+
+def ragged_kernel(be_ref, act_ref, x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run_ragged(x, be, act):
+    # Scalar-prefetch grid spec: every index_map takes the 2 grid
+    # indices PLUS the 2 prefetched operands (be, act).
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(4, 2),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda bi, fi: (bi, 0)),       # PAL001: 2 != 2+2
+            pl.BlockSpec((1, 8, 8),
+                         lambda bi, fi, be, act: (be[bi], 0)),  # PAL002: 2 coords
+        ],
+        out_specs=pl.BlockSpec((8, 8),
+                               lambda bi, fi, be, act: (bi, 0)),  # PAL003: 12 % 8
+        scratch_shapes=[pltpu.VMEM((8, 8), jnp.float32)],
+    )
+    return pl.pallas_call(
+        ragged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((12, 8), jnp.float32),
+    )(be, act, x)

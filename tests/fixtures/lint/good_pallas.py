@@ -22,3 +22,28 @@ def run(x, n):
         out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((16, 16), jnp.float32),
     )(n, x)
+
+
+def ragged_kernel(be_ref, act_ref, x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run_ragged(x, be, act):
+    # Scalar-prefetch grid spec with scratch accumulation (the ragged
+    # MoE FFN shape): index_maps take grid indices + prefetched refs.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(4, 2),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda bi, fi, be, act: (bi, 0)),
+            pl.BlockSpec((1, 8, 8),
+                         lambda bi, fi, be, act: (be[bi], 0, fi)),
+        ],
+        out_specs=pl.BlockSpec((8, 8), lambda bi, fi, be, act: (bi, 0)),
+        scratch_shapes=[pltpu.VMEM((8, 8), jnp.float32)],
+    )
+    return pl.pallas_call(
+        ragged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.float32),
+    )(be, act, x)

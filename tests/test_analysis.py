@@ -88,6 +88,9 @@ def test_pallas_kernel_checker_exact():
         ("PAL004", "warning", 20),   # rank-1 spec without memory_space
         ("PAL003", "error", 22),     # 12 not divisible by block 8
         ("PAL003", "error", 31),     # out block rank 1 != out_shape rank 2
+        ("PAL001", "error", 51),     # arity 2 != grid 2 + 2 scalar-prefetch
+        ("PAL002", "error", 52),     # ragged index_map returns 2 of 3 coords
+        ("PAL003", "error", 55),     # grid_spec out block 8 vs out_shape 12
     ]
     assert _by_file(fs, "good_pallas.py") == []
 

@@ -118,6 +118,7 @@ def test_path_refs_resolve(doc, ref):
                                     "repro.distributed.multihost",
                                     "repro.serving.workload",
                                     "repro.serving.frontend",
+                                    "repro.kernels.moe_route",
                                     "repro.scenarios.base",
                                     "repro.scenarios.library"])
 def test_paper_map_covers_public_functions(module):
